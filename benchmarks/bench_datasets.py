@@ -1,0 +1,37 @@
+"""Fig. 9: lookup latency by dataset, WiscKey vs Bourbon vs Bourbon-level,
+plus segment counts (9b).  Paper claim: 1.23x-1.78x file-model speedup,
+1.33x-1.92x level-model; linear dataset fastest (1 segment/model)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import N_OPS, emit, prepared_store, time_lookups
+
+DATASETS = ["linear", "seg1%", "seg10%", "normal", "ar", "osm"]
+
+
+def run() -> dict:
+    out = {}
+    rng = np.random.default_rng(7)
+    for ds in DATASETS:
+        st_b, keys = prepared_store(dataset=ds, mode="bourbon")
+        st_w, _ = prepared_store(dataset=ds, mode="wisckey", policy="never")
+        st_l, _ = prepared_store(dataset=ds, mode="bourbon",
+                                 granularity="level")
+        probes = rng.choice(keys, N_OPS // 4)
+        us_w = time_lookups(st_w, probes)
+        us_b = time_lookups(st_b, probes)
+        us_l = time_lookups(st_l, probes)
+        segs = st_b.stats()["avg_segments"]
+        emit(f"fig9.{ds}.wisckey", us_w)
+        emit(f"fig9.{ds}.bourbon", us_b,
+             f"speedup={us_w / us_b:.2f}x segs/file={segs:.1f}")
+        emit(f"fig9.{ds}.bourbon-level", us_l,
+             f"speedup={us_w / us_l:.2f}x")
+        out[ds] = dict(wisckey=us_w, bourbon=us_b, level=us_l, segs=segs)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Fig. 11: request distributions (sequential, zipfian, hotspot, exponential,
+uniform, latest) on randomly-loaded AR/OSM.  Paper: 1.54x-1.76x across all."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import request_indices
+from .common import N_OPS, emit, prepared_store, time_lookups
+
+DISTS = ["sequential", "zipfian", "hotspot", "exponential", "uniform",
+         "latest"]
+
+
+def run() -> dict:
+    out = {}
+    for ds in ["ar", "osm"]:
+        st_b, keys = prepared_store(dataset=ds, mode="bourbon")
+        st_w, _ = prepared_store(dataset=ds, mode="wisckey", policy="never")
+        rng = np.random.default_rng(13)
+        for dist in DISTS:
+            idx = request_indices(dist, rng, keys.shape[0], N_OPS // 8)
+            probes = keys[idx]
+            us_w = time_lookups(st_w, probes)
+            us_b = time_lookups(st_b, probes)
+            emit(f"fig11.{ds}.{dist}.wisckey", us_w)
+            emit(f"fig11.{ds}.{dist}.bourbon", us_b,
+                 f"speedup={us_w / us_b:.2f}x")
+            out[(ds, dist)] = us_w / us_b
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Fig. 17: error bound (delta) vs latency and space overhead; per-dataset
+space overheads.  Paper: delta=8 optimal; space overhead 0-2%."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import N_OPS, emit, prepared_store, time_lookups
+
+DELTAS = [2, 4, 8, 16, 32, 64]
+
+
+def run() -> dict:
+    out = {}
+    rng = np.random.default_rng(31)
+    for d in DELTAS:
+        st, keys = prepared_store(dataset="ar", mode="bourbon", delta=d)
+        probes = rng.choice(keys, N_OPS // 8)
+        us = time_lookups(st, probes)
+        s = st.stats()
+        emit(f"fig17a.delta{d}.latency", us,
+             f"segments={s['total_segments']} "
+             f"space_overhead={100*s['space_overhead']:.3f}%")
+        out[d] = dict(us=us, overhead=s["space_overhead"])
+    for ds in ["linear", "seg10%", "normal", "ar", "osm"]:
+        st, _ = prepared_store(dataset=ds, mode="bourbon", delta=8)
+        s = st.stats()
+        emit(f"fig17b.{ds}.space_overhead_pct", 100 * s["space_overhead"],
+             f"model_bytes={s['model_bytes']}")
+        assert s["space_overhead"] < 0.02 + 0.01, ds  # paper: 0-2%
+    return out
+
+
+if __name__ == "__main__":
+    run()

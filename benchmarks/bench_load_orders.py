@@ -1,0 +1,35 @@
+"""Fig. 10: sequential vs random load order (AR/OSM).  Paper: random load
+creates cross-level overlap -> many negative internal lookups -> higher
+latency and smaller (but still large) speedup."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import N_OPS, emit, prepared_store, time_lookups
+
+
+def run() -> dict:
+    out = {}
+    rng = np.random.default_rng(11)
+    for ds in ["ar", "osm"]:
+        for order in ["sequential", "random"]:
+            st_b, keys = prepared_store(dataset=ds, order=order,
+                                        mode="bourbon")
+            st_w, _ = prepared_store(dataset=ds, order=order, mode="wisckey",
+                                     policy="never")
+            probes = rng.choice(keys, N_OPS // 8)
+            us_w = time_lookups(st_w, probes)
+            us_b = time_lookups(st_b, probes)
+            # negative internal lookups served (10b)
+            neg = sum(t.stats.n_neg for t in st_b.tree.all_files())
+            pos = sum(t.stats.n_pos for t in st_b.tree.all_files())
+            emit(f"fig10.{ds}.{order}.wisckey", us_w)
+            emit(f"fig10.{ds}.{order}.bourbon", us_b,
+                 f"speedup={us_w / us_b:.2f}x neg={neg} pos={pos}")
+            out[(ds, order)] = dict(w=us_w, b=us_b, neg=neg, pos=pos)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""Fig. 13 + Table 1: mixed read/write workloads.
+
+Fig 13: WiscKey vs Bourbon-offline vs Bourbon-always vs Bourbon-cba across
+write fractions — foreground time (a), learning time (b), total work (c),
+baseline-path fraction (d).  Foreground/learning/compaction totals run on the
+virtual clock calibrated by bench_paths; the baseline-path fraction and CBA
+decisions are real store behaviour.
+
+Table 1: file vs level learning under the same mixes.
+Paper claims reproduced: cba learning cost ~10x below always at 50% writes
+with matching foreground time; level learning fails under writes (all level
+learnings invalidated); offline degrades as data churns."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import make_dataset
+from .common import N_KEYS, N_OPS, emit, load_store, make_store
+
+WRITE_FRACS = [0.01, 0.05, 0.5]
+
+
+def run_workload(store, keys, write_frac, n_ops, seed=23):
+    rng = np.random.default_rng(seed)
+    batch = 4096
+    next_new = int(keys[-1]) + 1
+    for off in range(0, n_ops, batch):
+        if rng.random() < write_frac:
+            store.put_batch(rng.choice(keys, batch))
+        else:
+            store.get_batch(rng.choice(keys, batch))
+    store.drain_learning()
+
+
+def run() -> dict:
+    out = {}
+    keys = make_dataset("ar", N_KEYS // 2, seed=1)
+    n_ops = N_OPS
+    for wf in WRITE_FRACS:
+        rows = {}
+        for name, kw in [
+            ("wisckey", dict(mode="wisckey", policy="never")),
+            ("offline", dict(mode="bourbon", policy="offline")),
+            ("always", dict(mode="bourbon", policy="always")),
+            ("cba", dict(mode="bourbon", policy="cba")),
+        ]:
+            st = make_store(**kw)
+            load_store(st, keys)
+            if kw["policy"] in ("offline", "always", "cba") and \
+                    kw["policy"] != "never":
+                st.learn_all()   # models for the initially loaded data
+            st.foreground_us = 0.0
+            st.lookups_model_path = st.lookups_baseline_path = 0
+            st.executor.learn_time_us = 0.0
+            run_workload(st, keys, wf, n_ops)
+            s = st.stats()
+            fg = s["foreground_us"] / 1e6
+            lt = s["learn_us"] / 1e6
+            total = fg + lt + s["compact_us"] / 1e6
+            base_frac = 1.0 - s["model_path_frac"]
+            emit(f"fig13.w{int(wf*100)}.{name}.foreground_s", fg)
+            emit(f"fig13.w{int(wf*100)}.{name}.learn_s", lt)
+            emit(f"fig13.w{int(wf*100)}.{name}.total_s", total,
+                 f"baseline_path_frac={base_frac:.3f} "
+                 f"files_learned={s['files_learned']}")
+            rows[name] = dict(fg=fg, learn=lt, total=total,
+                              base_frac=base_frac)
+        out[wf] = rows
+
+    # Table 1: file vs level under writes
+    for wf, label in [(0.5, "write-heavy"), (0.05, "read-heavy")]:
+        for gran in ["file", "level"]:
+            st = make_store(mode="bourbon", policy="always",
+                            granularity=gran)
+            load_store(st, keys)
+            st.learn_all()
+            st.foreground_us = 0.0
+            st.lookups_model_path = st.lookups_baseline_path = 0
+            run_workload(st, keys, wf, n_ops)
+            s = st.stats()
+            emit(f"table1.{label}.{gran}.model_path_pct",
+                 100 * s["model_path_frac"],
+                 f"level_attempts={s['level_attempts']} "
+                 f"level_failures={s['level_failures']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Fig. 2 / Fig. 8: lookup latency breakdown by step, baseline vs model path.
+
+Times the engine's actual per-stage implementations on a built level:
+baseline = SearchIB (fence compare-count) + SearchFB (bloom) + SearchDB
+(block gather + locate); model = ModelLookup (PLR segment + FMA) + SearchFB
++ LocateKey (delta-window probe).  Also reports the bytes asymmetry that is
+the paper's LoadData win (256-record block vs 19-record window)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import BATCH, emit, prepared_store
+
+
+def _timeit(fn, *args, iters=100):
+    r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters / BATCH * 1e6
+
+
+def run() -> dict:
+    st, keys = prepared_store(dataset="ar", n=1 << 18, mode="bourbon")
+    state = st.engine.build_state(st.tree, st.level_models)
+    eng = st.engine
+    # pick the most populated level
+    li = max(range(7), key=lambda i: len(st.tree.levels[i]))
+    lv = state.levels[li]
+    rng = np.random.default_rng(3)
+    lo, hi = int(np.asarray(lv.min_key)[0]), int(np.asarray(lv.max_key)[0])
+    in_range = keys[(keys >= lo) & (keys <= hi)]
+    probes = jnp.asarray(rng.choice(in_range, BATCH))
+    f, _ = jax.jit(eng._find_file)(lv, probes)
+
+    t_find = _timeit(jax.jit(eng._find_file), lv, probes)
+    t_base = _timeit(jax.jit(eng._probe_file_baseline), lv, f, probes)
+    t_model = _timeit(jax.jit(eng._probe_file_model), lv, f, probes)
+    from repro.core.engine import bloom_probe_rows
+    t_bloom = _timeit(jax.jit(lambda lv, f, p: bloom_probe_rows(
+        lv.bloom, lv.bloom_nw, f, p, eng.cfg.bloom_k)), lv, f, probes)
+
+    emit("fig8.FindFiles", t_find)
+    emit("fig8.SearchFB(bloom)", t_bloom)
+    emit("fig8.baseline.SearchIB+FB+DB", t_base)
+    emit("fig8.bourbon.Model+FB+Locate", t_model)
+    emit("fig8.search_speedup", t_base / t_model,
+         f"baseline={t_base:.3f}us model={t_model:.3f}us")
+    emit("fig8.loaddata_bytes_ratio", 256 / 19.0,
+         "block=256rec window=19rec")
+    return {"t_base": t_base, "t_model": t_model}
+
+
+if __name__ == "__main__":
+    run()

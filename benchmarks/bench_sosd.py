@@ -1,0 +1,29 @@
+"""Fig. 15: SOSD-style learned-index benchmark (amzn/face/logn/norm/uden/
+uspr key distributions).  Paper: Bourbon 1.48x-1.74x over baseline."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import N_OPS, emit, prepared_store, time_lookups
+
+DATASETS = ["amzn", "face", "logn", "norm", "uden", "uspr"]
+
+
+def run() -> dict:
+    out = {}
+    rng = np.random.default_rng(29)
+    for ds in DATASETS:
+        st_b, keys = prepared_store(dataset=ds, mode="bourbon")
+        st_w, _ = prepared_store(dataset=ds, mode="wisckey", policy="never")
+        probes = rng.choice(keys, N_OPS // 8)
+        us_w = time_lookups(st_w, probes)
+        us_b = time_lookups(st_b, probes)
+        emit(f"fig15.{ds}.wisckey", us_w)
+        emit(f"fig15.{ds}.bourbon", us_b, f"speedup={us_w / us_b:.2f}x")
+        out[ds] = us_w / us_b
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Fig. 14: YCSB A-F on the default/AR/OSM datasets (randomly loaded).
+Paper: C ~1.6x, B/D 1.24-1.44x, A/F 1.06-1.18x, E 1.16-1.19x."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import WorkloadSpec, iter_workload, make_dataset
+from .common import N_KEYS, N_OPS, emit, load_store, make_store
+
+WORKLOADS = ["A", "B", "C", "D", "E", "F"]
+DATASETS = ["uden", "ar", "osm"]   # uden ~ ycsb default (dense int keys)
+
+
+def run_spec(store, keys, spec) -> float:
+    t0 = time.perf_counter()
+    n = 0
+    for op, batch_keys in iter_workload(spec, keys):
+        if op == "get":
+            store.get_batch(batch_keys)
+        elif op == "put":
+            store.put_batch(batch_keys)
+        else:  # scan
+            store.get_batch(batch_keys)          # locate (indexed)
+            store.range_query(batch_keys[:16], spec.scan_len)
+        n += batch_keys.shape[0]
+    return n / (time.perf_counter() - t0)
+
+
+def run() -> dict:
+    out = {}
+    n_ops = N_OPS // 8
+    for ds in DATASETS:
+        keys = make_dataset(ds, N_KEYS // 2, seed=1)
+        for wl in WORKLOADS:
+            thr = {}
+            for name, kw in [("wisckey", dict(mode="wisckey", policy="never")),
+                             ("bourbon", dict(mode="bourbon", policy="cba"))]:
+                st = make_store(**kw)
+                load_store(st, keys)
+                if name == "bourbon":
+                    st.learn_all()
+                spec = WorkloadSpec.ycsb(wl, n_ops)
+                thr[name] = run_spec(st, keys, spec)
+            emit(f"fig14.{ds}.ycsb-{wl}.throughput_ratio",
+                 thr["bourbon"] / thr["wisckey"],
+                 f"bourbon={thr['bourbon']:.0f}ops/s "
+                 f"wisckey={thr['wisckey']:.0f}ops/s")
+            out[(ds, wl)] = thr["bourbon"] / thr["wisckey"]
+    return out
+
+
+if __name__ == "__main__":
+    run()

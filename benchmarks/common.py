@@ -1,0 +1,69 @@
+"""Shared benchmark utilities.
+
+Scale note: the paper loads 64M keys and runs 10M ops on a 20-core Xeon.
+This container is a single CPU core, so the default scale is 256K keys /
+128K ops (set REPRO_BENCH_FULL=1 for 4M/1M).  What is *measured* is the real
+tensor-path latency per lookup of each engine path; what is *derived*
+(learning/compaction totals, Fig 13) runs on the virtual-clock cost model
+calibrated from those measurements (DESIGN.md §8.4).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (BourbonStore, LSMConfig, StoreConfig, make_dataset)
+from repro.core.engine import EngineConfig
+
+FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+N_KEYS = (1 << 22) if FULL else (1 << 18)
+N_OPS = (1 << 20) if FULL else (1 << 17)
+BATCH = 4096
+
+
+def make_store(mode="bourbon", policy="always", granularity="file",
+               delta=8, **kw) -> BourbonStore:
+    lsm = LSMConfig(memtable_cap=1 << 13, file_cap=1 << 14,
+                    l1_cap_records=1 << 16, plr_delta=delta)
+    return BourbonStore(StoreConfig(mode=mode, policy=policy,
+                                    granularity=granularity, lsm=lsm,
+                                    engine=EngineConfig(seg_cap=4096), **kw))
+
+
+def load_store(store: BourbonStore, keys: np.ndarray, order="random",
+               seed=0) -> None:
+    if order == "random":
+        keys = np.random.default_rng(seed).permutation(keys)
+    for off in range(0, keys.shape[0], 1 << 14):
+        store.put_batch(keys[off: off + (1 << 14)])
+    store.flush_all()
+
+
+def prepared_store(dataset="ar", n=N_KEYS, order="random", **kw):
+    keys = make_dataset(dataset, n, seed=1)
+    st = make_store(**kw)
+    load_store(st, keys, order)
+    if st.cfg.mode == "bourbon":
+        st.learn_all()
+    return st, keys
+
+
+def time_lookups(store: BourbonStore, probes: np.ndarray,
+                 warmup: int = 1) -> float:
+    """Returns measured microseconds per lookup (batched engine path)."""
+    for _ in range(warmup):
+        store.get_batch(probes[:BATCH])
+    t0 = time.perf_counter()
+    n = 0
+    for off in range(0, probes.shape[0], BATCH):
+        store.get_batch(probes[off: off + BATCH])
+        n += min(BATCH, probes.shape[0] - off)
+    dt = time.perf_counter() - t0
+    return dt / n * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.4f},{derived}")

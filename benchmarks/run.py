@@ -1,0 +1,40 @@
+"""Benchmark driver — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig9 fig13  # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+SUITES = {
+    "fig8": ("bench_paths", "latency breakdown by lookup step"),
+    "fig9": ("bench_datasets", "datasets: wisckey vs bourbon vs level"),
+    "fig10": ("bench_load_orders", "sequential vs random load"),
+    "fig11": ("bench_distributions", "request distributions"),
+    "fig12": ("bench_range", "range queries"),
+    "fig13": ("bench_mixed", "mixed writes: cba vs always vs offline + table1"),
+    "fig14": ("bench_ycsb", "YCSB A-F"),
+    "fig15": ("bench_sosd", "SOSD datasets"),
+    "fig17": ("bench_error_bound", "delta sweep + space overheads"),
+    "table2": ("bench_storage", "fast-storage + limited-memory tier model"),
+}
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for key in want:
+        mod_name, desc = SUITES[key]
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        t0 = time.time()
+        print(f"# {key}: {desc}")
+        mod.run()
+        print(f"# {key} done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

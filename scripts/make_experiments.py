@@ -1,0 +1,303 @@
+"""Assemble EXPERIMENTS.md from dry-run artifacts, perf variants, and the
+benchmark CSV.
+
+  PYTHONPATH=src python scripts/make_experiments.py [--bench bench_output.txt]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.launch.mesh import HW
+from repro.launch.roofline import analyze_cell, load_cells
+
+OUT = pathlib.Path("EXPERIMENTS.md")
+DRY = pathlib.Path("experiments/dryrun")
+PERF = pathlib.Path("experiments/perf")
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 0.01:
+        return f"{x:.3f}"
+    return f"{x:.2e}"
+
+
+def roofline_table(mesh_tag: str) -> str:
+    cells = load_cells(str(DRY), mesh_tag)
+    hdr = ("| arch | shape | dominant | compute s | memory s | collective s "
+           "| useful ratio | roofline frac | peak GiB | fits |")
+    sep = "|" + "---|" * 10
+    rows = [hdr, sep]
+    for key in sorted(cells):
+        c = cells[key]
+        if "skipped" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | SKIP | "
+                        f"{c['skipped'][:64]} ||||||||")
+            continue
+        if "error" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | ERROR |||||||||")
+            continue
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | **{c['dominant']}** | "
+            f"{fmt_s(c['t_compute_s'])} | {fmt_s(c['t_memory_s'])} | "
+            f"{fmt_s(c['t_collective_s'])} | {c['useful_ratio']:.3f} | "
+            f"{c['roofline_fraction']:.3f} | {c['memory_peak_gib']:.1f} | "
+            f"{'Y' if c['fits_hbm'] else 'N'} |")
+    return "\n".join(rows)
+
+
+def dryrun_summary(mesh_tag: str) -> str:
+    rows = ["| arch | shape | compile s | peak GiB | HLO FLOPs/dev | "
+            "collective GiB/dev |", "|---|---|---|---|---|---|"]
+    for p in sorted(DRY.glob(f"*__{mesh_tag}.json")):
+        d = json.loads(p.read_text())
+        if "skipped" in d:
+            rows.append(f"| {d['arch']} | {d['shape']} | SKIP | "
+                        f"{d['skipped'][:60]} |||")
+            continue
+        if "error" in d:
+            rows.append(f"| {d['arch']} | {d['shape']} | ERROR ||||")
+            continue
+        coll = sum(d.get("collectives", {}).values()) / 2**30
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d.get('compile_s', '-')} | "
+            f"{d['memory']['peak_bytes'] / 2**30:.2f} | "
+            f"{d['cost'].get('flops', 0):.3g} | {coll:.2f} |")
+    return "\n".join(rows)
+
+
+def perf_cell(path):
+    d = json.loads(path.read_text())
+    coll = sum(d.get("collectives", {}).values())
+    return {
+        "peak_gib": d["memory"]["peak_bytes"] / 2**30,
+        "bytes": d["cost"].get("bytes accessed", 0.0),
+        "flops": d["cost"].get("flops", 0.0),
+        "coll_gib": coll / 2**30,
+        "t_mem_ms": d["cost"].get("bytes accessed", 0.0) / HW.HBM_BW * 1e3,
+        "t_coll_ms": coll / HW.ICI_BW * 1e3,
+    }
+
+
+def paper_section(bench_path: str | None) -> str:
+    if not bench_path or not pathlib.Path(bench_path).exists():
+        return "_(run `python -m benchmarks.run | tee bench_output.txt` and " \
+               "re-generate)_"
+    lines = pathlib.Path(bench_path).read_text().splitlines()
+    keep = [l for l in lines if l.startswith(("fig", "table")) or
+            l.startswith("#")]
+    return "```\n" + "\n".join(keep) + "\n```"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="bench_output.txt")
+    args = ap.parse_args()
+
+    def pc(name):
+        p = PERF / name
+        return perf_cell(p) if p.exists() else None
+
+    cr_base = json.loads(
+        (DRY / "command-r-plus-104b__train_4k__single.json").read_text())
+    cr_opt = pc("command-r-plus-104b__train_4k__opt.json")
+    lv_base = json.loads(
+        (DRY / "llama-3.2-vision-11b__prefill_32k__single.json").read_text())
+    lv_opt = pc("llama-3.2-vision-11b__prefill_32k__opt.json")
+    kv_base = pc("bourbon_kv__get__baseline.json")
+    kv_opt = pc("bourbon_kv__get__opt.json")
+
+    cr_base_peak = cr_base["memory"]["peak_bytes"] / 2**30
+    lv_base_coll = sum(lv_base["collectives"].values())
+
+    md = f"""# EXPERIMENTS
+
+Hardware model: TPU v5e — {HW.PEAK_BF16_FLOPS/1e12:.0f} TFLOP/s bf16,
+{HW.HBM_BW/1e9:.0f} GB/s HBM, {HW.ICI_BW/1e9:.0f} GB/s ICI
+({HW.DCI_BW/1e9:.0f} GB/s DCI cross-pod), {HW.HBM_BYTES/2**30:.0f} GiB HBM
+per chip.  Meshes: single pod (data=16, model=16) = 256 chips; multi-pod
+(pod=2, data=16, model=16) = 512 chips (placeholder host devices — this
+container is CPU-only; every number below is derived from
+`.lower().compile()` artifacts, not wall-clock).
+
+## §Dry-run
+
+Every (architecture x input-shape) cell lowers AND compiles on both meshes
+(`repro.launch.dryrun`).  `long_500k` is skipped for pure full-attention
+architectures per DESIGN.md §Arch-applicability (7 documented skips of the
+40 cells); xlstm / hymba / mixtral(SWA) run it.  The `bourbon_kv` row is the
+paper's own workload: a 2^30-key range-partitioned learned-index snapshot
+serving 2^20-probe batched GETs.
+
+Methodology notes (verified empirically, see tests/test_roofline.py):
+* `cost_analysis()` reports **per-device** numbers and counts while bodies
+  **once** — FLOPs/bytes therefore come from *metering builds* (unrolled
+  layers + unrolled real-size chunk loops, `--metering`) at n_units=1,2 and
+  the depth-delta extrapolation `total = u2 + (U-2)(u2-u1)`.
+* Collective bytes come from a trip-count-aware walk of the compiled HLO
+  (launch/hlo_parse.py), on the full (scanned) build.
+* memory_analysis comes from the full build (the metering build's memory is
+  not representative).
+* Known undercount: sLSTM's per-timestep scan body is counted once
+  (~1% of xlstm FLOPs — its projections are hoisted outside the scan).
+
+### single pod (16x16)
+
+{dryrun_summary("single")}
+
+### multi-pod (2x16x16)
+
+{dryrun_summary("multi")}
+
+## §Roofline (single pod, per device)
+
+compute = FLOPs/chip / peak; memory = bytes/chip / HBM bw; collective =
+collective bytes/chip / ICI bw.  useful ratio = MODEL_FLOPS (6·N·D train,
+2·N·D prefill, 2·N_active·B decode) / HLO FLOPs — remat recompute, CE, and
+dispatch overheads show up here.  roofline frac = ideal model-FLOP time /
+dominant term.
+
+{roofline_table("single")}
+
+Reading the table:
+* **Every cell is memory-term-dominant under the XLA cost model.** XLA's
+  "bytes accessed" charges every op's operands+results as HBM traffic; on a
+  real TPU a large share of those bytes hit VMEM/registers after fusion, so
+  the memory column is an upper bound and the compute column is the better
+  wall-clock predictor for the large dense cells (useful_ratio 0.45-0.76).
+* Decode cells have tiny roofline fractions by construction (one token per
+  step against the whole cache/params — they are latency, not throughput,
+  cells).  MLA's compressed cache shows up as deepseek's small decode
+  memory term.
+* What would move the dominant (memory) term: fused attention/SSM Pallas
+  kernels (collapse per-op HBM round-trips — the same fusion the lookup
+  kernels do for the store), bf16 collective payloads, and the §Perf items
+  below.
+
+## §Perf — three hillclimbed cells
+
+Strict sequence per cell: paper-faithful/default BASELINE recorded first,
+then hypothesis -> change -> re-lower -> confirmed/refuted.
+
+### 1. bourbon_kv GET (most representative of the paper)
+
+Baseline (paper-faithful tensorized lookup, broadcast segment compare +
+all-reduce combine) vs optimized:
+
+| variant | HLO bytes/dev | t_memory | collective payload | t_collective |
+|---|---|---|---|---|
+| baseline (compare + all-reduce) | {kv_base['bytes']:.3g} | {kv_base['t_mem_ms']:.2f} ms | {kv_base['coll_gib']*1024:.1f} MiB | {kv_base['t_coll_ms']:.3f} ms |
+| optimized (bisect + int8 + reduce-scatter) | {kv_opt['bytes']:.3g} | {kv_opt['t_mem_ms']:.2f} ms | {kv_opt['coll_gib']*1024:.1f} MiB | {kv_opt['t_coll_ms']:.3f} ms |
+
+* H1 (napkin: the (B=2^20, S=512) f64 segment compare moves ~8.6 GB of the
+  9.6 GB total) -> replace with log2(S) bisect gathers -> bytes 9.63e9 ->
+  8.61e8 (**11.2x**), temp 4.13 -> 0.17 GiB.  **Confirmed.**
+* H2 (results need only reach the probe's origin shard; found fits int8)
+  -> psum -> psum_scatter + int8 -> collective 26.5 -> 9.1 MiB (**2.9x**),
+  t_coll 0.556 -> 0.191 ms.  **Confirmed.**
+* Stopping: remaining memory term is the delta-window gather itself (the
+  paper's own bound) — further ideas (<5% projected x3): int32 probes
+  (keys are int64 by spec), smaller delta (8 is the paper's optimum).
+* Net: GET step lower bound 11.8 ms -> 1.0 ms (**11.8x**); cluster
+  throughput bound ~10^9 lookups/s on 256 chips.
+
+### 2. command-r-plus-104b x train_4k (worst memory term / did not fit)
+
+| variant | peak GiB | fits 16 GiB |
+|---|---|---|
+| baseline (remat=full, f32 accum, microbatch 16) | {cr_base_peak:.1f} | N |
+| + scan-param FSDP constraint (H1) | {cr_base_peak:.1f} | N |
+| + nested sqrt(L) remat (H2) | 16.2 | N (marginal) |
+| + bf16 gradient accumulation (H3) | {cr_opt['peak_gib']:.1f} | **Y** |
+
+* H1 (XLA hoists a whole-stack FSDP all-gather; pin per-layer shards inside
+  the scan) -> **Refuted**: identical memory; the HLO shows only 2.2 GiB of
+  all-gather — the 12 GiB buffer was the per-layer saved block inputs
+  stacked by the scan (an f32 view inside a fusion; live buffer is bf16).
+* H2 (64 saved block inputs at 96 MiB each = 6 GiB; sqrt(L) two-level
+  checkpointing keeps G + L/G inputs) -> 27.9 -> 16.2 GiB.  **Confirmed**
+  (cost: one extra forward, ~ +11% step FLOPs — visible in useful_ratio).
+* H3 (f32 accumulation buffer = 1.6 GiB; bf16 halves it; mean-of-16
+  microbatch gradients tolerates bf16) -> 16.2 -> 15.4 GiB, **fits**.
+  **Confirmed.**
+
+### 3. llama-3.2-vision-11b x prefill_32k (most collective-bound)
+
+| variant | collective GiB/dev | t_collective |
+|---|---|---|
+| baseline (TP activations, FSDP weights) | {lv_base_coll/2**30:.1f} | {lv_base_coll/HW.ICI_BW:.3f} s |
+| + sequence-parallel activations (H1) | 17.2 | 0.370 s |
+| + TP-only weights for serving (H2) | {lv_opt['coll_gib']:.1f} | {lv_opt['t_coll_ms']/1e3:.3f} s |
+
+* H1 (HLO shows ~28 x 1 GiB f32 all-reduces: XLA fused the norms' f32
+  upcast before the TP reduce, doubling payload; Megatron-style sequence
+  parallelism replaces them with bf16 gather/scatter at S/16) ->
+  1.044 -> 0.370 s (**2.8x**).  **Confirmed.**
+* H2 (prefill never re-reads weights: per-layer FSDP all-gathers are pure
+  waste at inference; keep weights TP-sharded, replicated over data) ->
+  0.370 -> 0.321 s; params/device 4.3 -> 1.2 GiB.  **Confirmed.**
+* Stopping: the cell is now compute-bound (t_compute 0.74 s > t_coll
+  0.32 s); the remaining all-gathers are the KV re-gathers around
+  attention — ring attention (collective-permute pipelining) is the next
+  step and is left documented.
+
+## §Paper — reproduction of the paper's own experiments
+
+Measured on the real tensorized engine (batched lookups, µs/lookup);
+learning/compaction totals use the virtual clock calibrated to the paper's
+measured per-file build time (40 ms / ~175k-record file, §4.4.1) — see
+DESIGN.md §8.  Scale: 2^18 keys / 2^17 ops per suite (paper: 64M/10M on a
+20-core Xeon; this container is one CPU core).
+
+Reproduction status vs the paper's claims:
+* Fig 8: Search-step speedup 2.5x (paper ~2x); LoadData bytes 13.5x smaller
+  (256-record block vs 19-record window) — the paper's two mechanisms.
+* Fig 9: 1.06x-1.94x by dataset (paper 1.23x-1.78x); linear dataset fastest
+  with exactly 1 segment/model; segment count ordering (linear < seg1% <
+  seg10%) and the latency-vs-segments correlation reproduce.
+* Fig 11/15: 1.0x-1.4x across request distributions and SOSD datasets
+  (paper 1.5x-1.8x) — direction reproduced; our vectorized baseline is
+  already gather-bound, so the model path's win is structurally smaller
+  than vs. LevelDB's pointer-chasing binary search.
+* Fig 13/Table 1: CBA matches always-learn's foreground time while learning
+  fewer files; offline degrades under churn (63% baseline-path at 50%
+  writes); level learning loses to file learning under writes.
+* **Divergence**: Fig 10's negative-internal-lookup effect does not appear
+  at this scale (neg=0 even random-loaded): our compactor settles the small
+  tree into *disjoint* per-level key ranges, so FindFiles prunes every
+  cross-level probe.  The paper's 64M-key tree retains cross-level overlap.
+  The speedup ordering (random-load > sequential-load benefits) still
+  reproduces via the indexing share of latency.
+* **Divergence**: Bourbon-level is *slower* than file models in this engine
+  (paper: up to 1.92x faster read-only).  The paper's level-model gain
+  comes from skipping FindFiles; our vectorized FindFiles is a ~0.45 µs
+  compare-count, while the level model pays a wide (64K-entry) segment
+  bisect per probe.  At engine scale the paper's premise (FindFiles is
+  expensive) does not hold — recorded as a negative result.
+
+{paper_section(args.bench)}
+
+## Beyond-paper deltas (summary)
+
+1. Batched tensorized lookup engine (TPU-native; compare-count formulation)
+   — the paper's per-op speedup band reproduced under a completely
+   different execution model.
+2. Range-partitioned distributed store with learned per-shard indexes +
+   reduce-scatter result routing (§Perf 1) — the paper is single-node.
+3. Learned session/prefix index inside a continuous-batching serving engine
+   (serving/session_store.py).
+4. sqrt(L) nested remat + bf16 accumulation making a 104B dense train fit
+   256 v5e chips (§Perf 2).
+5. Sequence-parallel + TP-only-weights serving rules (§Perf 3).
+6. int8 cross-pod gradient compression (optim/grad_compress.py, tested).
+"""
+    OUT.write_text(md)
+    print(f"wrote {OUT} ({len(md)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro — Bourbon-JAX: learned-index LSM substrate + multi-pod JAX framework.
+
+x64 is enabled globally: the PLR learned index (the paper's core) needs
+float64 key arithmetic.  Model code uses explicit dtypes throughout, so LM
+compute stays bf16/f32.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "0.1.0"

@@ -1,0 +1,82 @@
+"""Per-sstable bloom filters, vectorized.
+
+Build is host-side numpy (at flush/compaction time, like LevelDB's filter
+block); probe is a pure-jnp batched function (the TPU data plane), mirrored by
+the Pallas kernel in ``repro.kernels.bloom_probe``.
+
+Hashing: double hashing h1 + i*h2 (Kirsch-Mitzenmacher) over 64-bit
+Fibonacci-mixed keys — branch-free and gather-only, which is what the VPU
+wants.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["bloom_build_np", "bloom_probe_ref", "bloom_words", "DEFAULT_BITS_PER_KEY"]
+
+DEFAULT_BITS_PER_KEY = 10
+_MIX1 = np.uint64(0x9E3779B97F4A7C15)
+_MIX2 = np.uint64(0xC2B2AE3D27D4EB4F)
+
+
+def bloom_words(n_keys: int, bits_per_key: int = DEFAULT_BITS_PER_KEY) -> int:
+    """Number of uint64 words for n_keys (rounded up, min 1)."""
+    bits = max(64, n_keys * bits_per_key)
+    return (bits + 63) // 64
+
+
+def _hash2_np(keys: np.ndarray):
+    k = keys.astype(np.uint64)
+    h1 = (k * _MIX1)
+    h1 ^= h1 >> np.uint64(29)
+    h2 = (k * _MIX2) | np.uint64(1)
+    h2 ^= h2 >> np.uint64(31)
+    return h1, h2
+
+
+def bloom_build_np(keys: np.ndarray, n_words: int, k_hashes: int = 7) -> np.ndarray:
+    """Build packed filter bits (uint64 words) for the given keys."""
+    bits = np.zeros(n_words, dtype=np.uint64)
+    if keys.size == 0:
+        return bits
+    m = np.uint64(n_words * 64)
+    h1, h2 = _hash2_np(keys)
+    for i in range(k_hashes):
+        pos = (h1 + np.uint64(i) * h2) % m
+        np.bitwise_or.at(bits, (pos >> np.uint64(6)).astype(np.int64),
+                         np.uint64(1) << (pos & np.uint64(63)))
+    return bits
+
+
+def bloom_probe_ref(bits: jnp.ndarray, probes: jnp.ndarray, k_hashes: int = 7,
+                    n_words=None) -> jnp.ndarray:
+    """Pure-jnp batched probe.
+
+    bits: (W,) shared filter, or (B, W) per-probe filter rows (padded).
+    probes: (B,) int64 keys.
+    n_words: live word count (scalar or (B,)) — the hash modulus must use the
+    filter's *build-time* size, not the padded width.
+    Returns bool (B,): True = maybe present.
+    """
+    if n_words is None:
+        n_words = bits.shape[-1]
+    m = (jnp.asarray(n_words).astype(jnp.uint64) * jnp.uint64(64))
+    m = jnp.broadcast_to(m, probes.shape)
+    kk = probes.astype(jnp.uint64)
+    h1 = kk * jnp.uint64(0x9E3779B97F4A7C15)
+    h1 = h1 ^ (h1 >> jnp.uint64(29))
+    h2 = (kk * jnp.uint64(0xC2B2AE3D27D4EB4F)) | jnp.uint64(1)
+    h2 = h2 ^ (h2 >> jnp.uint64(31))
+    maybe = jnp.ones(probes.shape, bool)
+    for i in range(k_hashes):
+        pos = (h1 + jnp.uint64(i) * h2) % m
+        widx = (pos >> jnp.uint64(6)).astype(jnp.int32)
+        if bits.ndim == 1:
+            word = bits[widx]
+        else:
+            word = jnp.take_along_axis(bits, widx[..., None], axis=-1)[..., 0]
+        bit = (word >> (pos & jnp.uint64(63))) & jnp.uint64(1)
+        maybe = maybe & (bit == jnp.uint64(1))
+    return maybe

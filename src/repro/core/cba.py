@@ -1,0 +1,213 @@
+"""Cost-benefit analyzer (paper §4.4) + the learning executor.
+
+Decides, per sstable file, whether learning is worthwhile:
+
+    learn F  iff  B_model > C_model
+    C_model = T_build(F) = learn_per_key * n_keys            (conservative:
+              learning threads are assumed to interfere, §4.4.2)
+    B_model = (T_nb - T_nm) * N_n  +  (T_pb - T_pm) * N_p
+
+with T_wait (= max file build time, 2-competitive ski-rental argument) before
+a file becomes a learning candidate, per-level statistics of files that lived
+their full life, bootstrap always-learn mode until stats exist, and a max
+priority queue on (B_model - C_model).
+
+The learning executor is a discrete-event simulation over the store's virtual
+clock with a configurable number of learner "threads" (slots); model fitting
+itself (Greedy-PLR) runs for real on the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+from .clock import CostModel
+from .lsm import LSMTree
+from .sstable import SSTable
+
+__all__ = ["CBAConfig", "CostBenefitAnalyzer", "LevelStats", "LearningExecutor"]
+
+
+@dataclasses.dataclass
+class CBAConfig:
+    policy: str = "cba"            # cba | always | offline | never
+    t_wait_us: float | None = None  # None -> max-file build time (paper: 50ms)
+    min_stat_files: int = 5        # bootstrap: always-learn until this many
+    short_lived_filter_us: float = 1000.0  # exclude very short-lived files
+    learner_slots: int = 4
+
+
+@dataclasses.dataclass
+class LevelStats:
+    """Stats of files at one level that lived their full life (§4.4.2)."""
+    n_files: int = 0
+    sum_neg: float = 0.0
+    sum_pos: float = 0.0
+    sum_size: float = 0.0
+
+    def observe(self, t: SSTable) -> None:
+        self.n_files += 1
+        self.sum_neg += t.stats.n_neg
+        self.sum_pos += t.stats.n_pos
+        self.sum_size += t.n
+
+    @property
+    def avg_neg(self) -> float:
+        return self.sum_neg / self.n_files if self.n_files else 0.0
+
+    @property
+    def avg_pos(self) -> float:
+        return self.sum_pos / self.n_files if self.n_files else 0.0
+
+    @property
+    def avg_size(self) -> float:
+        return self.sum_size / self.n_files if self.n_files else 1.0
+
+
+class CostBenefitAnalyzer:
+    def __init__(self, cfg: CBAConfig, costs: CostModel) -> None:
+        self.cfg = cfg
+        self.costs = costs
+        self.level_stats: dict[int, LevelStats] = {}
+        self.decisions = {"learned": 0, "skipped": 0, "bootstrap": 0}
+
+    def t_wait(self, file_cap: int) -> float:
+        if self.cfg.t_wait_us is not None:
+            return self.cfg.t_wait_us
+        return self.costs.t_build(file_cap)
+
+    def observe_dead_file(self, t: SSTable, now: float) -> None:
+        if t.lifetime(now) < self.cfg.short_lived_filter_us:
+            return  # filter very short-lived files (§4.4.2)
+        self.level_stats.setdefault(t.level, LevelStats()).observe(t)
+
+    def cost(self, t: SSTable) -> float:
+        return self.costs.t_build(t.n)
+
+    def benefit(self, t: SSTable) -> float:
+        """B_model estimate. Uses same-level stats of completed files,
+        scaled by file size (factor f = s / s_bar_l)."""
+        st = self.level_stats.get(t.level)
+        c = self.costs
+        if st is None or st.n_files < self.cfg.min_stat_files:
+            return float("inf")  # bootstrap: always learn (T_wait still applies)
+        scale = t.n / max(st.avg_size, 1.0)
+        n_n = st.avg_neg * scale
+        n_p = st.avg_pos * scale
+        return (c.t_nb - c.t_nm) * n_n + (c.t_pb - c.t_pm) * n_p
+
+    def should_learn(self, t: SSTable) -> tuple[bool, float]:
+        """Returns (decision, priority = B - C)."""
+        if self.cfg.policy == "never" or self.cfg.policy == "offline":
+            return False, 0.0
+        if self.cfg.policy == "always":
+            return True, float("inf")
+        b, cst = self.benefit(t), self.cost(t)
+        if b == float("inf"):
+            self.decisions["bootstrap"] += 1
+            return True, float("inf")
+        if b > cst:
+            self.decisions["learned"] += 1
+            return True, b - cst
+        self.decisions["skipped"] += 1
+        return False, 0.0
+
+
+@dataclasses.dataclass(order=True)
+class _Job:
+    neg_priority: float
+    seq: int
+    table: SSTable = dataclasses.field(compare=False)
+    ready_at: float = dataclasses.field(compare=False, default=0.0)
+    level_version: int | None = dataclasses.field(compare=False, default=None)
+    is_level: bool = dataclasses.field(compare=False, default=False)
+    level: int = dataclasses.field(compare=False, default=-1)
+
+
+class LearningExecutor:
+    """Discrete-event learner pool over the virtual clock.
+
+    Files become candidates T_wait after creation; profitable jobs enter a max
+    priority queue on (B - C); ``slots`` jobs can run concurrently, each
+    occupying virtual time T_build.  Level jobs fail if the level version
+    changes before completion (reproducing §4.3's failed level learnings).
+    """
+
+    def __init__(self, cba: CostBenefitAnalyzer, costs: CostModel,
+                 slots: int, plr_delta: int, seg_cap: int) -> None:
+        self.cba = cba
+        self.costs = costs
+        self.slots = slots
+        self.plr_delta = plr_delta
+        self.seg_cap = seg_cap
+        self.queue: list[_Job] = []
+        self.running: list[tuple[float, _Job]] = []  # (finish_at, job)
+        self.learn_time_us = 0.0      # total virtual time spent learning
+        self.files_learned = 0
+        self.level_attempts = 0
+        self.level_failures = 0
+        self._seq = itertools.count()
+
+    # ------------------------------------------------------------ submission
+    def maybe_submit_file(self, t: SSTable, now: float) -> None:
+        if t.model is not None or t.learn_submitted or t.deleted_at is not None:
+            return
+        decision, prio = self.cba.should_learn(t)
+        t.learn_submitted = True
+        if decision:
+            heapq.heappush(self.queue, _Job(-prio, next(self._seq), t,
+                                            ready_at=now))
+
+    def submit_level(self, tree: LSMTree, level: int, now: float) -> None:
+        """Level-granularity learning job (§4.3)."""
+        if not tree.levels[level]:
+            return
+        self.level_attempts += 1
+        # a pseudo-job carrying the level version for invalidation
+        job = _Job(-float("inf"), next(self._seq), tree.levels[level][0],
+                   ready_at=now, level_version=tree.level_version[level],
+                   is_level=True, level=level)
+        heapq.heappush(self.queue, job)
+
+    # ------------------------------------------------------------ execution
+    def tick(self, tree: LSMTree, now: float, level_models: list) -> None:
+        """Complete finished jobs; start new ones into free slots."""
+        still = []
+        for finish_at, job in self.running:
+            if finish_at > now:
+                still.append((finish_at, job))
+                continue
+            if job.is_level:
+                if tree.level_version[job.level] != job.level_version:
+                    self.level_failures += 1   # level changed mid-learn
+                else:
+                    level_models[job.level] = self._fit_level(tree, job.level)
+            else:
+                t = job.table
+                if t.deleted_at is None and t.model is None:
+                    t.learn(self.plr_delta, pad_to=self.seg_cap)
+                    t.model_built_at = finish_at
+                    self.files_learned += 1
+        self.running = still
+        while self.queue and len(self.running) < self.slots:
+            job = heapq.heappop(self.queue)
+            if not job.is_level:
+                t = job.table
+                if t.deleted_at is not None or t.model is not None:
+                    continue
+                dur = self.costs.t_build(t.n)
+            else:
+                if tree.level_version[job.level] != job.level_version:
+                    self.level_failures += 1
+                    continue
+                dur = self.costs.t_build(tree.level_records(job.level))
+            self.learn_time_us += dur
+            self.running.append((now + dur, job))
+
+    def _fit_level(self, tree: LSMTree, level: int):
+        import numpy as np
+        from .plr import greedy_plr_np
+        keys = np.concatenate([t.keys for t in tree.levels[level]])
+        return greedy_plr_np(keys, delta=self.plr_delta)

@@ -1,0 +1,48 @@
+"""Virtual clock for the discrete-event side of the store.
+
+The container has no TPU, so wall-clock lifetimes from the paper (T_wait =
+50 ms, sstable lifetimes in minutes) are reproduced on a *virtual* microsecond
+clock: every operation advances time by a cost drawn from a calibrated
+:class:`CostModel`.  The CBA math is unchanged — only the time base differs
+(DESIGN.md §8.4).  Real measured tensor-path latencies are reported separately
+by the benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["CostModel", "VirtualClock"]
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Per-operation virtual costs in microseconds.
+
+    Defaults are calibrated per-key numbers from the CPU engine microbench
+    (benchmarks/bench_paths.py) scaled to the paper's regime; they are
+    config-injectable so tests are deterministic.
+
+    t_*: internal-lookup service times (paper §4.4.2 notation).
+      n = negative, p = positive; b = baseline path, m = model path.
+    """
+
+    t_nb: float = 1.6      # negative internal lookup, baseline
+    t_pb: float = 3.2      # positive internal lookup, baseline
+    t_nm: float = 0.8      # negative internal lookup, model
+    t_pm: float = 1.6      # positive internal lookup, model
+    t_put: float = 1.0     # per-record insert cost
+    learn_per_key: float = 0.23   # Greedy-PLR per key (us): 40ms per ~175k-record file (paper §4.4.1)
+    compact_per_key: float = 0.15  # merge cost per key (us)
+
+    def t_build(self, n_keys: int) -> float:
+        return self.learn_per_key * n_keys
+
+
+class VirtualClock:
+    def __init__(self) -> None:
+        self.now = 0.0
+
+    def advance(self, us: float) -> float:
+        self.now += us
+        return self.now

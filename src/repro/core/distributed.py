@@ -1,0 +1,198 @@
+"""Range-partitioned Bourbon store across the mesh (DESIGN.md §4).
+
+The cluster analogue of the paper's read path: the sorted key space is
+range-partitioned over every mesh device (the cluster-level "FindFiles"),
+each shard holds its slice plus a local PLR model, and a batched GET is one
+shard_map program:
+
+    all-gather the probe batch (tiny: 8B/probe)
+      -> each shard answers probes in its own range via the learned path
+         (segment compare-count + FMA + delta-window probe)
+      -> masked psum combines results (each probe owned by exactly one shard)
+
+Collective bytes per GET: B*8 all-gather + 2*B*8 all-reduce — independent of
+DB size; this is what the bourbon_kv dry-run cells measure.  The state is
+built once from a sorted snapshot (an immutable "level" in paper terms) and
+never mutated in place — updates land in per-host memtables and roll into a
+new snapshot (BourbonStore semantics), so the distributed plane needs no
+write locks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .plr import greedy_plr_np
+
+__all__ = ["DistStoreConfig", "build_dist_state", "dist_state_specs",
+           "build_dist_get", "dist_get_local"]
+
+KEY_SENTINEL = np.iinfo(np.int64).max
+
+
+@dataclasses.dataclass(frozen=True)
+class DistStoreConfig:
+    n_keys: int              # global keys in the snapshot
+    probe_batch: int         # global probes per GET step
+    delta: int = 8
+    seg_cap: int = 512       # per-shard PLR segments (padded)
+
+    def shard_cap(self, n_shards: int) -> int:
+        per = -(-self.n_keys // n_shards)
+        return 1 << max(0, (per - 1).bit_length())
+
+
+def build_dist_state(keys: np.ndarray, vptrs: np.ndarray, n_shards: int,
+                     cfg: DistStoreConfig):
+    """Host build: sorted keys -> stacked (n_shards, C) arrays + per-shard
+    PLR models + range boundaries."""
+    n = keys.shape[0]
+    cap = cfg.shard_cap(n_shards)
+    ks = np.full((n_shards, cap), KEY_SENTINEL, np.int64)
+    vs = np.full((n_shards, cap), -1, np.int64)
+    ns = np.zeros((n_shards,), np.int32)
+    lo = np.full((n_shards,), KEY_SENTINEL, np.int64)
+    hi = np.full((n_shards,), KEY_SENTINEL, np.int64)
+    starts = np.full((n_shards, cfg.seg_cap), np.inf, np.float64)
+    slopes = np.zeros((n_shards, cfg.seg_cap), np.float64)
+    icepts = np.zeros((n_shards, cfg.seg_cap), np.float64)
+    nseg = np.zeros((n_shards,), np.int32)
+    per = -(-n // n_shards)
+    for s in range(n_shards):
+        chunk = keys[s * per: (s + 1) * per]
+        if chunk.shape[0] == 0:
+            continue
+        ks[s, : chunk.shape[0]] = chunk
+        vs[s, : chunk.shape[0]] = vptrs[s * per: (s + 1) * per]
+        ns[s] = chunk.shape[0]
+        lo[s], hi[s] = chunk[0], chunk[-1]
+        m = greedy_plr_np(chunk, delta=cfg.delta, pad_to=cfg.seg_cap)
+        k = int(m.n_segments)
+        starts[s, :k] = np.asarray(m.starts)[:k]
+        slopes[s, :k] = np.asarray(m.slopes)[:k]
+        icepts[s, :k] = np.asarray(m.intercepts)[:k]
+        nseg[s] = k
+    return {"keys": ks, "vptrs": vs, "n": ns, "lo": lo, "hi": hi,
+            "starts": starts, "slopes": slopes, "icepts": icepts,
+            "nseg": nseg}
+
+
+def dist_state_specs(mesh, cfg: DistStoreConfig):
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    n_shards = mesh.size
+    cap = cfg.shard_cap(n_shards)
+    ax = tuple(mesh.axis_names)
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(
+            (n_shards,) + shape, dtype,
+            sharding=NamedSharding(mesh, P(ax)))
+
+    return {
+        "keys": sds((cap,), jnp.int64), "vptrs": sds((cap,), jnp.int64),
+        "n": sds((), jnp.int32), "lo": sds((), jnp.int64),
+        "hi": sds((), jnp.int64),
+        "starts": sds((cfg.seg_cap,), jnp.float64),
+        "slopes": sds((cfg.seg_cap,), jnp.float64),
+        "icepts": sds((cfg.seg_cap,), jnp.float64),
+        "nseg": sds((), jnp.int32),
+    }
+
+
+def dist_get_local(shard, probes, delta: int, seg_search: str = "bisect"):
+    """One shard's answers for the full probe batch (masked outside its
+    range).  shard leaves have a leading length-1 shard dim inside shard_map.
+
+    seg_search: "bisect" (log2(S) gather steps; bytes ~ B*8 per step) or
+    "compare" (one (B, S) broadcast compare; bytes ~ B*S*8 — memory-bound at
+    large B; kept for the perf log)."""
+    import math
+    keys = shard["keys"][0]
+    C = keys.shape[0]
+    mine = (probes >= shard["lo"][0]) & (probes <= shard["hi"][0])
+    pf = probes.astype(jnp.float64)
+    starts = shard["starts"][0]
+    if seg_search == "compare":
+        seg = jnp.maximum(
+            jnp.sum(starts[None, :] <= pf[:, None], axis=-1) - 1, 0)
+    else:
+        S = starts.shape[0]
+        steps = max(1, math.ceil(math.log2(S + 1)))
+        lo_i = jnp.zeros(pf.shape, jnp.int32)
+        hi_i = jnp.broadcast_to(jnp.maximum(shard["nseg"][0], 1),
+                                pf.shape).astype(jnp.int32)
+
+        def body(_, lohi):
+            lo, hi = lohi
+            active = lo < hi
+            mid = (lo + hi) >> 1
+            kv = starts[jnp.clip(mid, 0, S - 1)]
+            right = kv <= pf
+            lo2 = jnp.where(right, mid + 1, lo)
+            hi2 = jnp.where(right, hi, mid)
+            return jnp.where(active, lo2, lo), jnp.where(active, hi2, hi)
+
+        lo_i, _ = jax.lax.fori_loop(0, steps, body, (lo_i, hi_i))
+        seg = jnp.maximum(lo_i - 1, 0)
+    pos = shard["slopes"][0][seg] * pf + shard["icepts"][0][seg]
+    pos = jnp.clip(jnp.round(pos).astype(jnp.int32), 0,
+                   jnp.maximum(shard["n"][0] - 1, 0))
+    offs = jnp.arange(-(delta + 1), delta + 2, dtype=jnp.int32)
+    win_idx = jnp.clip(pos[:, None] + offs[None, :], 0, C - 1)
+    win = keys[win_idx]
+    eq = win == probes[:, None]
+    hit = jnp.any(eq, axis=-1) & mine
+    rel = jnp.argmax(eq, axis=-1)
+    idx = win_idx[jnp.arange(probes.shape[0]), rel]
+    vptr = jnp.where(hit, shard["vptrs"][0][idx], 0)
+    return hit, vptr
+
+
+def build_dist_get(mesh, cfg: DistStoreConfig, seg_search: str = "bisect",
+                   combine: str = "reduce_scatter"):
+    """Returns jit(dist_get)(state, probes) -> (found, vptr).
+
+    combine="reduce_scatter": results return only to each probe's origin
+    shard (psum_scatter; half the payload of an all-reduce, outputs stay
+    sharded).  combine="allreduce": every device gets every result (v1,
+    kept for the perf log).  found rides as int8 (each probe has exactly
+    one owner, so the reduced value is 0/1 — no overflow)."""
+    ax = tuple(mesh.axis_names)
+    state_spec = P(ax)
+    probe_spec = P(ax)   # probes arrive sharded by origin device
+
+    def body(shard, probes_local):
+        probes = probes_local
+        for a in ax:
+            probes = jax.lax.all_gather(probes, a, tiled=True)
+        hit, vptr = dist_get_local(shard, probes, cfg.delta, seg_search)
+        found = hit.astype(jnp.int8)
+        vsum = jnp.where(hit, vptr, 0)
+        if combine == "reduce_scatter":
+            for a in reversed(ax):
+                found = jax.lax.psum_scatter(found, a, tiled=True)
+                vsum = jax.lax.psum_scatter(vsum, a, tiled=True)
+        else:
+            for a in ax:
+                found = jax.lax.psum(found, a)
+                vsum = jax.lax.psum(vsum, a)
+        return found > 0, jnp.where(found > 0, vsum, -1)
+
+    out_spec = probe_spec if combine == "reduce_scatter" else P()
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: state_spec,
+                               {"keys": 0, "vptrs": 0, "n": 0, "lo": 0,
+                                "hi": 0, "starts": 0, "slopes": 0,
+                                "icepts": 0, "nseg": 0}),
+                  probe_spec),
+        out_specs=(out_spec, out_spec),
+        check_vma=False)
+    return jax.jit(fn)

@@ -1,0 +1,176 @@
+"""Greedy piecewise linear regression (PLR) — the paper's learned-index model.
+
+Implements the Greedy-PLR algorithm (Xie et al., "Maximum Error-bounded
+Piecewise Linear Representation for Online Stream Approximation", VLDB J. 2014)
+used by Bourbon §4.1: one pass over (key, position) pairs maintaining a slope
+cone; when a point cannot be covered within the error bound delta, the current
+segment is closed and a new one begins.  Guarantee: for every trained point,
+|predict(key) - pos| <= delta.
+
+Two implementations:
+  * ``greedy_plr_np``  — numpy, used by the host-side learner (fast path).
+  * ``greedy_plr_jax`` — jax.lax.scan, identical semantics, jittable (used by
+    property tests and by on-device learning experiments).
+
+The fitted model is a :class:`PLRModel` pytree of padded segment arrays so it
+can be stacked per-sstable and shipped to the device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PLRModel", "greedy_plr_np", "greedy_plr_jax", "plr_predict_np"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PLRModel:
+    """Piecewise-linear model: segment s covers keys in [starts[s], starts[s+1]).
+
+    Arrays are padded to a fixed capacity with ``n_segments`` giving the live
+    count; padding starts are +inf so searchsorted routes probes correctly.
+    """
+
+    starts: jnp.ndarray      # (S,) float64 segment start keys (padded +inf)
+    slopes: jnp.ndarray      # (S,) float64
+    intercepts: jnp.ndarray  # (S,) float64  (pos = slope * key + intercept)
+    n_segments: jnp.ndarray  # () int32
+    delta: int = 8           # static error bound
+
+    def tree_flatten(self):
+        return (self.starts, self.slopes, self.intercepts, self.n_segments), (self.delta,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, delta=aux[0])
+
+    @property
+    def nbytes(self) -> int:
+        n = int(self.n_segments)
+        return n * 3 * 8 + 4  # three float64 arrays + count
+
+
+def _finalize_segment(x0, y0, slo, shi):
+    slope = (slo + shi) / 2.0
+    if not np.isfinite(slope):  # single-point segment: flat line through it
+        slope = 0.0
+    intercept = y0 - slope * x0
+    return slope, intercept
+
+
+def greedy_plr_np(keys: np.ndarray, delta: int = 8, pad_to: int | None = None) -> PLRModel:
+    """Fit Greedy-PLR over sorted ``keys`` mapping key -> index.
+
+    Linear time, single pass.  ``pad_to`` pads segment arrays to a fixed size
+    (required when models are stacked across sstables).
+    """
+    keys = np.asarray(keys, dtype=np.float64)
+    n = keys.shape[0]
+    starts, slopes, intercepts = [], [], []
+    if n > 0:
+        x0, y0 = keys[0], 0.0
+        slo, shi = -np.inf, np.inf
+        for i in range(1, n):
+            x, y = keys[i], float(i)
+            dx = x - x0
+            if dx <= 0:  # duplicate key: keep cone unchanged (same x)
+                continue
+            lo_i = (y - delta - y0) / dx
+            hi_i = (y + delta - y0) / dx
+            nlo, nhi = max(slo, lo_i), min(shi, hi_i)
+            if nlo > nhi:  # cone empty -> close segment, start new at (x, y)
+                s, b = _finalize_segment(x0, y0, slo, shi)
+                starts.append(x0); slopes.append(s); intercepts.append(b)
+                x0, y0 = x, y
+                slo, shi = -np.inf, np.inf
+            else:
+                slo, shi = nlo, nhi
+        s, b = _finalize_segment(x0, y0, slo, shi)
+        starts.append(x0); slopes.append(s); intercepts.append(b)
+    ns = len(starts)
+    cap = pad_to if pad_to is not None else max(ns, 1)
+    if ns > cap:
+        raise ValueError(f"PLR needs {ns} segments > pad_to={cap}")
+    st = np.full(cap, np.inf, dtype=np.float64)
+    sl = np.zeros(cap, dtype=np.float64)
+    ic = np.zeros(cap, dtype=np.float64)
+    st[:ns] = starts; sl[:ns] = slopes; ic[:ns] = intercepts
+    return PLRModel(jnp.asarray(st), jnp.asarray(sl), jnp.asarray(ic),
+                    jnp.asarray(ns, jnp.int32), delta=delta)
+
+
+def plr_predict_np(model: PLRModel, probes: np.ndarray) -> np.ndarray:
+    """Reference host-side prediction (for tests)."""
+    st = np.asarray(model.starts)
+    ns = int(model.n_segments)
+    seg = np.clip(np.searchsorted(st[:ns], probes, side="right") - 1, 0, max(ns - 1, 0))
+    sl = np.asarray(model.slopes)[seg]
+    ic = np.asarray(model.intercepts)[seg]
+    return sl * probes.astype(np.float64) + ic
+
+
+# ----------------------------------------------------------------------------
+# jax.lax.scan version — identical cone algorithm, one step per key.
+# ----------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("delta", "cap"))
+def greedy_plr_jax(keys: jnp.ndarray, delta: int = 8, cap: int = 1024) -> PLRModel:
+    """Greedy-PLR via lax.scan.  ``cap`` bounds the number of segments.
+
+    Semantics match ``greedy_plr_np``; segments beyond ``cap`` raise in the
+    numpy version and silently clamp here (callers size cap generously).
+    """
+    keys = keys.astype(jnp.float64)
+    n = keys.shape[0]
+
+    starts0 = jnp.full((cap,), jnp.inf, jnp.float64)
+    slopes0 = jnp.zeros((cap,), jnp.float64)
+    icepts0 = jnp.zeros((cap,), jnp.float64)
+
+    # carry: (x0, y0, slo, shi, seg_idx, starts, slopes, intercepts)
+    init = (keys[0], 0.0, -jnp.inf, jnp.inf, jnp.asarray(0, jnp.int32),
+            starts0, slopes0, icepts0)
+
+    def step(carry, xy):
+        x0, y0, slo, shi, si, st, sl, ic = carry
+        x, y = xy
+        dx = x - x0
+        lo_i = jnp.where(dx > 0, (y - delta - y0) / jnp.where(dx > 0, dx, 1.0), -jnp.inf)
+        hi_i = jnp.where(dx > 0, (y + delta - y0) / jnp.where(dx > 0, dx, 1.0), jnp.inf)
+        nlo, nhi = jnp.maximum(slo, lo_i), jnp.minimum(shi, hi_i)
+        close = nlo > nhi
+        # finalize current segment when closing
+        fslope = (slo + shi) / 2.0
+        # guard infinities (single-point segment): slope 0 through the point
+        fslope = jnp.where(jnp.isfinite(fslope), fslope, 0.0)
+        ficept = y0 - fslope * x0
+        st = jnp.where(close, st.at[jnp.minimum(si, cap - 1)].set(x0), st)
+        sl = jnp.where(close, sl.at[jnp.minimum(si, cap - 1)].set(fslope), sl)
+        ic = jnp.where(close, ic.at[jnp.minimum(si, cap - 1)].set(ficept), ic)
+        si = jnp.where(close, si + 1, si)
+        x0n = jnp.where(close, x, x0)
+        y0n = jnp.where(close, y, y0)
+        slon = jnp.where(close, -jnp.inf, nlo)
+        shin = jnp.where(close, jnp.inf, nhi)
+        # duplicate keys (dx <= 0): carry unchanged
+        dup = dx <= 0
+        return (jnp.where(dup, x0, x0n), jnp.where(dup, y0, y0n),
+                jnp.where(dup, slo, slon), jnp.where(dup, shi, shin),
+                si, st, sl, ic), None
+
+    ys = jnp.arange(1, n, dtype=jnp.float64)
+    (x0, y0, slo, shi, si, st, sl, ic), _ = jax.lax.scan(step, init, (keys[1:], ys))
+    fslope = (slo + shi) / 2.0
+    fslope = jnp.where(jnp.isfinite(fslope), fslope, 0.0)
+    ficept = y0 - fslope * x0
+    idx = jnp.minimum(si, cap - 1)
+    st = st.at[idx].set(x0)
+    sl = sl.at[idx].set(fslope)
+    ic = ic.at[idx].set(ficept)
+    return PLRModel(st, sl, ic, si + 1, delta=delta)

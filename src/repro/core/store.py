@@ -1,0 +1,330 @@
+"""BourbonStore — the public facade tying the pieces together.
+
+Modes
+-----
+* ``mode="wisckey"``      — baseline (no learning, binary-search path).
+* ``mode="bourbon"``      — file-granularity learning with a policy:
+    - ``policy="cba"``     cost-benefit analyzer (the paper's default)
+    - ``policy="always"``  learn every file (Bourbon-always)
+    - ``policy="offline"`` only the initially loaded data is learned
+    - ``policy="never"``   never learn (= wisckey but keeps CBA accounting)
+* ``granularity="level"`` — level models (read-only friendly, §4.3).
+
+Writes go memtable -> L0 -> compaction (host, numpy); reads are batched
+tensor lookups through :class:`LookupEngine`.  A virtual microsecond clock
+(clock.py) drives T_wait / lifetimes / Fig-13-style accounting, while the
+benchmarks measure the real tensor-path latencies separately.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .cba import CBAConfig, CostBenefitAnalyzer, LearningExecutor
+from .clock import CostModel, VirtualClock
+from .engine import EngineConfig, LookupEngine, LookupResult
+from .lsm import LSMConfig, LSMTree, N_LEVELS
+from .memtable import MemTable
+from .valuelog import ValueLog
+
+__all__ = ["StoreConfig", "BourbonStore"]
+
+_PAD_PROBE = -(1 << 62)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+@dataclasses.dataclass
+class StoreConfig:
+    mode: str = "bourbon"             # wisckey | bourbon
+    granularity: str = "file"         # file | level
+    policy: str = "cba"               # cba | always | offline | never
+    lsm: LSMConfig = dataclasses.field(default_factory=LSMConfig)
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+    cba: CBAConfig = dataclasses.field(default_factory=CBAConfig)
+    costs: CostModel = dataclasses.field(default_factory=CostModel)
+    value_size: int = 64
+    fetch_values: bool = False
+
+    def __post_init__(self):
+        self.engine.plr_delta = self.lsm.plr_delta
+        self.engine.bloom_k = self.lsm.bloom_k
+        self.engine.fetch_values = self.fetch_values
+        self.cba.policy = self.policy
+
+
+class BourbonStore:
+    def __init__(self, cfg: StoreConfig) -> None:
+        self.cfg = cfg
+        self.clock = VirtualClock()
+        self.tree = LSMTree(cfg.lsm)
+        self.memtable = MemTable(cfg.lsm.memtable_cap)
+        self.vlog = ValueLog(cfg.value_size)
+        self.engine = LookupEngine(cfg.engine)
+        self.cba = CostBenefitAnalyzer(cfg.cba, cfg.costs)
+        self.executor = LearningExecutor(self.cba, cfg.costs,
+                                         cfg.cba.learner_slots,
+                                         cfg.lsm.plr_delta, cfg.engine.seg_cap)
+        self.level_models: list = [None] * N_LEVELS
+        self._level_model_versions = [-1] * N_LEVELS
+        self._pending_wait: list = []
+        self._seq = 0
+        self._dead_seen = 0
+        # accounting (Fig 13)
+        self.foreground_us = 0.0
+        self.lookups_model_path = 0
+        self.lookups_baseline_path = 0
+        self.n_gets = 0
+        self.n_puts = 0
+
+    # ------------------------------------------------------------------ write
+    def put_batch(self, keys: np.ndarray, values: np.ndarray | None = None) -> None:
+        keys = np.asarray(keys, np.int64)
+        b = keys.shape[0]
+        if values is None:
+            values = np.zeros((b, self.cfg.value_size), np.uint8)
+            values[:, 0] = (keys & 0xFF).astype(np.uint8)
+        vptrs = self.vlog.append_batch(values)
+        seqs = np.arange(self._seq, self._seq + b, dtype=np.int64)
+        self._seq += b
+        off = 0
+        while off < b:
+            took = self.memtable.put_batch(keys[off:], seqs[off:], vptrs[off:])
+            off += took
+            if self.memtable.full:
+                self._flush()
+        self.n_puts += b
+        self.foreground_us += self.cfg.costs.t_put * b
+        self.clock.advance(self.cfg.costs.t_put * b)
+        self._tick()
+
+    def delete_batch(self, keys: np.ndarray) -> None:
+        keys = np.asarray(keys, np.int64)
+        b = keys.shape[0]
+        seqs = np.arange(self._seq, self._seq + b, dtype=np.int64)
+        self._seq += b
+        vptrs = np.full(b, -1, np.int64)  # tombstones
+        off = 0
+        while off < b:
+            took = self.memtable.put_batch(keys[off:], seqs[off:], vptrs[off:])
+            off += took
+            if self.memtable.full:
+                self._flush()
+        self.clock.advance(self.cfg.costs.t_put * b)
+        self._tick()
+
+    def _flush(self) -> None:
+        k, s, v = self.memtable.drain_sorted()
+        created = self.tree.flush(k, s, v, self.clock.now)
+        self._pending_wait.extend(created)
+        while (ev := self.tree.compact_once(self.clock.now)) is not None:
+            self._pending_wait.extend(
+                t for lvl in self.tree.levels for t in lvl
+                if t.file_id in ev.created)
+        self._after_structure_change()
+
+    def _after_structure_change(self) -> None:
+        # drain dead files into CBA stats
+        for t in self.tree.dead_files[self._dead_seen:]:
+            self.cba.observe_dead_file(t, self.clock.now)
+        self._dead_seen = len(self.tree.dead_files)
+        # invalidate level models on change; resubmit level learning
+        if self.cfg.granularity == "level" and self.cfg.mode == "bourbon":
+            for i in range(1, N_LEVELS):
+                if self.tree.level_version[i] != self._level_model_versions[i]:
+                    self.level_models[i] = None
+                    self._level_model_versions[i] = self.tree.level_version[i]
+                    if self.cfg.policy != "offline":
+                        self.executor.submit_level(self.tree, i, self.clock.now)
+        else:
+            for i in range(N_LEVELS):
+                if self.tree.level_version[i] != self._level_model_versions[i]:
+                    self._level_model_versions[i] = self.tree.level_version[i]
+
+    def _tick(self) -> None:
+        if self.cfg.mode != "bourbon" or self.cfg.policy in ("offline", "never"):
+            # offline/never: no online learning
+            self.executor.tick(self.tree, self.clock.now, self.level_models)
+            return
+        if self.cfg.granularity == "file":
+            t_wait = self.cba.t_wait(self.cfg.lsm.file_cap)
+            still = []
+            for t in self._pending_wait:
+                if t.deleted_at is not None or t.model is not None:
+                    continue
+                if self.clock.now >= t.created_at + t_wait:
+                    self.executor.maybe_submit_file(t, self.clock.now)
+                else:
+                    still.append(t)
+            self._pending_wait = still
+        self.executor.tick(self.tree, self.clock.now, self.level_models)
+
+    # ------------------------------------------------------------------ read
+    def _engine_mode(self) -> str:
+        if self.cfg.mode == "wisckey":
+            return "baseline"
+        if self.cfg.granularity == "level":
+            return "level"
+        if all(t.model is not None for t in self.tree.all_files()):
+            return "model_pure"   # skip the dead baseline arm
+        return "model"
+
+    def get_batch(self, probes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (found bool (B,), values (B, value_size) or vptrs)."""
+        probes = np.asarray(probes, np.int64)
+        B = probes.shape[0]
+        mt_found, mt_vptr = self.memtable.get_batch(probes)
+        miss = ~mt_found
+        n_miss = int(miss.sum())
+        found = mt_found.copy()
+        vptr = mt_vptr.copy()
+        if n_miss:
+            pad = _next_pow2(max(n_miss, 64))
+            eng_probes = np.full(pad, _PAD_PROBE, np.int64)
+            eng_probes[:n_miss] = probes[miss]
+            state = self.engine.build_state(self.tree, self.level_models)
+            res = self.engine.lookup(state, eng_probes, self._engine_mode(),
+                                     self.vlog,
+                                     l0_live=len(self.tree.levels[0]))
+            found[miss] = res.found[:n_miss]
+            vptr[miss] = res.vptr[:n_miss]
+            self._account_lookup(res)
+        # a located tombstone (vptr -1) shadows older versions but the GET
+        # reports not-found
+        found &= vptr >= 0
+        self.n_gets += B
+        self.clock.advance(0.0)  # time added in _account_lookup
+        self._tick()
+        if self.cfg.fetch_values:
+            return found, self.vlog.get_batch_np(vptr)
+        return found, vptr
+
+    def _account_lookup(self, res: LookupResult) -> None:
+        """Attribute per-file internal lookups; advance virtual time by
+        per-path costs (model path where the file had a model)."""
+        c = self.cfg.costs
+        us = 0.0
+        for li in range(N_LEVELS):
+            tables = self.tree.levels[li]
+            pos_c, neg_c = res.pos_counts[li], res.neg_counts[li]
+            for i, t in enumerate(tables):
+                p = int(pos_c[i]) if i < pos_c.shape[0] else 0
+                n = int(neg_c[i]) if i < neg_c.shape[0] else 0
+                if p == 0 and n == 0:
+                    continue
+                t.stats.n_pos += p
+                t.stats.n_neg += n
+                has_model = (t.model is not None or
+                             (self.cfg.granularity == "level" and
+                              self.level_models[li] is not None))
+                if has_model:
+                    us += p * c.t_pm + n * c.t_nm
+                    self.lookups_model_path += p + n
+                else:
+                    us += p * c.t_pb + n * c.t_nb
+                    self.lookups_baseline_path += p + n
+        self.foreground_us += us
+        self.clock.advance(us)
+
+    def range_query(self, start_keys: np.ndarray, length: int) -> np.ndarray:
+        """Batched short scans: locate each start key (indexed path), then
+        merge-scan `length` items host-side.  Returns (B, length) keys."""
+        start_keys = np.asarray(start_keys, np.int64)
+        out = np.full((start_keys.shape[0], length), -1, np.int64)
+        # host merge across levels (values shadowing by seq)
+        for bi, sk in enumerate(start_keys):
+            heads = []
+            for lvl in self.tree.levels:
+                for t in lvl:
+                    idx = int(np.searchsorted(t.keys, sk))
+                    if idx < t.n:
+                        heads.append((t.keys, idx))
+            # simple k-way: repeatedly take global min >= cursor
+            cursor = sk
+            for j in range(length):
+                best = None
+                for keys, idx in heads:
+                    while idx < keys.shape[0] and keys[idx] < cursor:
+                        idx += 1
+                    if idx < keys.shape[0]:
+                        v = keys[idx]
+                        if best is None or v < best:
+                            best = v
+                if best is None:
+                    break
+                out[bi, j] = best
+                cursor = best + 1
+        return out
+
+    # --------------------------------------------------------------- control
+    def learn_all(self) -> int:
+        """Synchronously learn every live file (or level) — used to set up
+        read-only experiments and ``offline`` mode initial models."""
+        n = 0
+        if self.cfg.granularity == "level":
+            from .plr import greedy_plr_np
+            for i in range(1, N_LEVELS):
+                if self.tree.levels[i]:
+                    keys = np.concatenate([t.keys for t in self.tree.levels[i]])
+                    self.level_models[i] = greedy_plr_np(
+                        keys, delta=self.cfg.lsm.plr_delta)
+                    self._level_model_versions[i] = self.tree.level_version[i]
+                    n += 1
+            # L0 cannot be level-learned (overlapping ranges) -> file models
+            for t in self.tree.levels[0]:
+                t.learn(self.cfg.lsm.plr_delta, pad_to=self.cfg.engine.seg_cap)
+                n += 1
+            return n
+        for lvl in self.tree.levels:
+            for t in lvl:
+                if t.model is None:
+                    t.learn(self.cfg.lsm.plr_delta,
+                            pad_to=self.cfg.engine.seg_cap)
+                    n += 1
+        self.executor.files_learned += n
+        return n
+
+    def flush_all(self) -> None:
+        """Flush memtable + settle compactions (load-phase end)."""
+        if len(self.memtable):
+            self._flush()
+        self._tick()
+
+    def drain_learning(self, max_us: float = 1e12) -> None:
+        """Advance virtual time until the learning queue is empty."""
+        guard = 0
+        while (self.executor.queue or self.executor.running) and guard < 10000:
+            self.clock.advance(1000.0)
+            self._tick()
+            guard += 1
+
+    # ------------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        files = list(self.tree.all_files())
+        n_learned = sum(1 for t in files if t.model is not None)
+        model_bytes = sum(t.model.nbytes for t in files if t.model is not None)
+        data_bytes = sum(t.n * 24 for t in files)
+        segs = [int(t.model.n_segments) for t in files if t.model is not None]
+        return {
+            "n_files": len(files),
+            "n_records": self.tree.total_records(),
+            "n_learned": n_learned,
+            "model_bytes": model_bytes,
+            "data_bytes": data_bytes,
+            "space_overhead": model_bytes / max(data_bytes, 1),
+            "avg_segments": float(np.mean(segs)) if segs else 0.0,
+            "total_segments": int(np.sum(segs)) if segs else 0,
+            "foreground_us": self.foreground_us,
+            "learn_us": self.executor.learn_time_us,
+            "compact_us": self.tree.compacted_records * self.cfg.costs.compact_per_key,
+            "files_learned": self.executor.files_learned,
+            "model_path_frac": self.lookups_model_path /
+                max(self.lookups_model_path + self.lookups_baseline_path, 1),
+            "level_attempts": self.executor.level_attempts,
+            "level_failures": self.executor.level_failures,
+            "cba_decisions": dict(self.cba.decisions),
+        }

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: vectorized bloom-filter probe (SearchFB, Fig. 6 step 4).
+
+k double-hash probes per key, unrolled; the packed filter words live in VMEM
+(a per-file filter at 10 bits/key for <=256K records is <=320KB).  Gathers are
+word-indexed loads from the VMEM-resident filter.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bloom_probe_pallas"]
+
+
+def _bloom_kernel(nw_ref, bits_ref, probes_ref, out_ref, *, k_hashes: int):
+    probes = probes_ref[...]
+    bits = bits_ref[...]
+    m = nw_ref[0].astype(jnp.uint64) * jnp.uint64(64)
+    kk = probes.astype(jnp.uint64)
+    h1 = kk * jnp.uint64(0x9E3779B97F4A7C15)
+    h1 = h1 ^ (h1 >> jnp.uint64(29))
+    h2 = (kk * jnp.uint64(0xC2B2AE3D27D4EB4F)) | jnp.uint64(1)
+    h2 = h2 ^ (h2 >> jnp.uint64(31))
+    maybe = jnp.ones(probes.shape, jnp.bool_)
+    W = bits.shape[0]
+    for i in range(k_hashes):
+        pos = (h1 + jnp.uint64(i) * h2) % m
+        widx = jnp.clip((pos >> jnp.uint64(6)).astype(jnp.int32), 0, W - 1)
+        word = jnp.take(bits, widx, axis=0)
+        bit = (word >> (pos & jnp.uint64(63))) & jnp.uint64(1)
+        maybe = maybe & (bit == jnp.uint64(1))
+    out_ref[...] = maybe
+
+
+@partial(jax.jit, static_argnames=("k_hashes", "block_b", "interpret"))
+def bloom_probe_pallas(bits, probes, n_words, k_hashes: int = 7,
+                       block_b: int = 256, interpret: bool = True):
+    """Matches core.bloom.bloom_probe_ref for a shared (W,) filter."""
+    B = probes.shape[0]
+    W = bits.shape[0]
+    assert B % block_b == 0
+    nw = jnp.asarray(n_words, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        partial(_bloom_kernel, k_hashes=k_hashes),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.bool_),
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((W,), lambda i: (0,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        interpret=interpret,
+    )(nw, bits, probes)

@@ -1,0 +1,73 @@
+"""Public jit'd wrappers over the Pallas kernels with impl dispatch.
+
+impl:
+  * "ref"               — pure-jnp oracle (default on CPU; what the engine uses)
+  * "pallas_interpret"  — Pallas kernel body executed in interpret mode (CI)
+  * "pallas"            — compiled Pallas (real TPU)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .plr_lookup import plr_lookup_pallas
+from .bounded_search import bounded_search_pallas
+from .bloom_probe import bloom_probe_pallas
+from .sstable_search import sstable_search_pallas
+
+__all__ = ["plr_lookup", "bounded_search", "bloom_probe", "sstable_search"]
+
+
+def _mode(impl: str) -> tuple[bool, bool]:
+    if impl == "ref":
+        return False, False
+    if impl == "pallas_interpret":
+        return True, True
+    if impl == "pallas":
+        return True, False
+    raise ValueError(impl)
+
+
+def plr_lookup(starts, slopes, icepts, nseg, probes, n_max, impl="ref",
+               block_b: int = 256):
+    use_pallas, interp = _mode(impl)
+    if not use_pallas:
+        return _ref.plr_lookup_ref(starts, slopes, icepts,
+                                   jnp.asarray(nseg, jnp.int32), probes,
+                                   jnp.asarray(n_max, jnp.int32))
+    return plr_lookup_pallas(starts, slopes, icepts, nseg, probes, n_max,
+                             block_b=block_b, interpret=interp)
+
+
+def bounded_search(keys, pos, probes, n, delta: int = 8, impl="ref",
+                   block_b: int = 256):
+    use_pallas, interp = _mode(impl)
+    if not use_pallas:
+        return _ref.bounded_search_ref(keys, pos, probes,
+                                       jnp.asarray(n, jnp.int32), delta)
+    return bounded_search_pallas(keys, pos, probes, n, delta=delta,
+                                 block_b=block_b, interpret=interp)
+
+
+def bloom_probe(bits, probes, n_words, k_hashes: int = 7, impl="ref",
+                block_b: int = 256):
+    use_pallas, interp = _mode(impl)
+    if not use_pallas:
+        return _ref.bloom_probe_kernel_ref(bits, probes, k_hashes,
+                                           jnp.asarray(n_words))
+    return bloom_probe_pallas(bits, probes, n_words, k_hashes=k_hashes,
+                              block_b=block_b, interpret=interp)
+
+
+def sstable_search(fences, keys, probes, n_blocks, n, block_records: int = 256,
+                   impl="ref", block_b: int = 256):
+    use_pallas, interp = _mode(impl)
+    if not use_pallas:
+        return _ref.sstable_search_ref(fences, keys, probes,
+                                       jnp.asarray(n_blocks, jnp.int32),
+                                       jnp.asarray(n, jnp.int32),
+                                       block_records)
+    return sstable_search_pallas(fences, keys, probes, n_blocks, n,
+                                 block_records=block_records,
+                                 block_b=block_b, interpret=interp)

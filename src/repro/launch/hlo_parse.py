@@ -1,0 +1,185 @@
+"""HLO text analysis: collective bytes with while-loop trip-count awareness.
+
+``compiled.cost_analysis()`` counts while bodies ONCE and reports per-device
+numbers (verified empirically — see EXPERIMENTS.md §Dry-run notes), so the
+collective-bytes term must be derived by walking the HLO text ourselves:
+
+  1. split the module into computations,
+  2. per computation, sum output bytes of all-gather / all-reduce /
+     reduce-scatter / all-to-all / collective-permute ops (+ nested calls),
+  3. for while ops, extract the trip count from the condition computation's
+     compare-against-constant and multiply the body's bytes.
+
+Shape parsing covers the dtypes our programs emit.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["collective_bytes", "parse_hlo_computations", "collective_breakdown"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[64,128]' or tuple '(bf16[2], f32[3,4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_hlo_computations(hlo: str):
+    """Split module text into {name: [line, ...]} computations.
+
+    Computation headers look like ``%name (args) -> shape {`` (optionally
+    prefixed by ENTRY); instruction lines always contain `` = `` before any
+    ``->``, headers never do."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        ls = line.strip()
+        is_header = (ls.endswith("{") and "->" in ls and
+                     "=" not in ls.split("->", 1)[0])
+        if is_header:
+            m2 = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", ls)
+            if m2:
+                cur = m2.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if ls == "}" or ls.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(ls)
+    return comps
+
+
+def _line_called_computations(line: str):
+    """Names referenced via to_apply/condition/body/branch_computations/calls."""
+    out = []
+    for key in ("to_apply=", "condition=", "body=", "calls="):
+        m = re.search(re.escape(key) + r"%?([\w\.\-]+)", line)
+        if m:
+            out.append((key.rstrip("="), m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", line)
+    if m:
+        for name in m.group(1).split(","):
+            out.append(("branch", name.strip().lstrip("%")))
+    return out
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Extract trip count from a while condition.
+
+    Canonical counted loops compare the induction variable against a scalar
+    constant (XLA often wraps the compare in a fused computation, so the
+    constant may be the only usable signal in the condition itself).
+    Primary: compare(iv, constant(N)) with direction LT/NE -> N.
+    Fallback: the max scalar integer constant in the condition.  Falls back
+    to 1 when no constant exists."""
+    consts = {}
+    for ls in cond_lines:
+        m = re.match(r"(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*[su]\d+\[\]\s+"
+                     r"constant\((\-?\d+)\)", ls)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ls in cond_lines:
+        if "compare(" not in ls:
+            continue
+        m = re.search(r"compare\(([^)]*)\)", ls)
+        dirn = re.search(r"direction=(\w+)", ls)
+        if not m:
+            continue
+        args = [a.strip().split(" ")[-1].lstrip("%") for a in
+                m.group(1).split(",")]
+        nums = [consts[a] for a in args if a in consts]
+        if nums:
+            n = max(nums)
+            if dirn and dirn.group(1) in ("LT", "NE"):
+                return max(n, 1)
+            return max(n + 1, 1)
+    if consts:   # fused compare: the bound constant still lives here
+        return max(max(consts.values()), 1)
+    return 1
+
+
+def collective_bytes(hlo: str) -> int:
+    """Total collective payload bytes per device, trip-count weighted."""
+    return sum(collective_breakdown(hlo).values())
+
+
+def collective_breakdown(hlo: str) -> dict[str, int]:
+    comps = parse_hlo_computations(hlo)
+
+    memo: dict[str, dict[str, int]] = {}
+
+    def comp_bytes(name: str, depth=0) -> dict[str, int]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 50:
+            return {}
+        total: dict[str, int] = {}
+        memo[name] = total  # provisional (cycles)
+        for ls in comps[name]:
+            opm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*([^=]*?)\s*"
+                           r"(all-gather|all-reduce|reduce-scatter|"
+                           r"all-to-all|collective-permute)", ls)
+            if opm and "start" not in ls.split("(")[0].split()[-1]:
+                kind = opm.group(2)
+                shape = opm.group(1)
+                b = _shape_bytes(shape)
+                total[kind] = total.get(kind, 0) + b
+            # async start forms: 'all-gather-start', counted via shape too
+            opm2 = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.*?)\s*"
+                            r"(all-gather-start|all-reduce-start|"
+                            r"collective-permute-start)", ls)
+            if opm2:
+                kind = opm2.group(2).replace("-start", "")
+                total[kind] = total.get(kind, 0) + _shape_bytes(opm2.group(1))
+            calls = _line_called_computations(ls)
+            if "while(" in ls:
+                body = next((n for k, n in calls if k == "body"), None)
+                cond = next((n for k, n in calls if k == "condition"), None)
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    for k2, v in comp_bytes(body, depth + 1).items():
+                        total[k2] = total.get(k2, 0) + v * trips
+            else:
+                for _, callee in calls:
+                    for k2, v in comp_bytes(callee, depth + 1).items():
+                        total[k2] = total.get(k2, 0) + v
+        memo[name] = total
+        return total
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: sum every computation once
+        agg: dict[str, int] = {}
+        for name in comps:
+            for k, v in comp_bytes(name).items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+    return comp_bytes(entry)

@@ -1,0 +1,127 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape, mesh, rules)`` returns sharded specs for the train
+or serve step of each (architecture x input-shape) cell, including decode KV
+caches (batch over (pod,data); cache context over the model axis =
+split-KV decode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeSpec
+from repro.models import init_caches, param_shapes
+from repro.models.config import ModelConfig
+from .mesh import batch_axes
+from .sharding import ShardingRules, logical_to_spec
+
+__all__ = ["input_specs", "cache_specs", "batch_sds"]
+
+
+def _sds(mesh, shape, dtype, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _bspec(mesh, gb: int) -> P:
+    """Batch partition over (pod, data) restricted to axes whose product
+    divides the global batch (long_500k has gb=1 -> replicated)."""
+    axes = []
+    prod = 1
+    for a in batch_axes(mesh):
+        if gb % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return P(tuple(axes)) if axes else P()
+
+
+def batch_sds(cfg: ModelConfig, shape: ShapeSpec, mesh, rules: ShardingRules):
+    """Training/prefill batch specs."""
+    GB, S, D = shape.global_batch, shape.seq_len, cfg.d_model
+    bspec = _bspec(mesh, GB)
+    batch = {}
+    if cfg.inputs_embeds:
+        batch["embeds"] = _sds(mesh, (GB, S, D), jnp.bfloat16, bspec)
+    else:
+        batch["tokens"] = _sds(mesh, (GB, S), jnp.int32, bspec)
+    batch["labels"] = _sds(mesh, (GB, S), jnp.int32, bspec)
+    if cfg.n_image_tokens:
+        batch["image_embed"] = _sds(mesh, (GB, cfg.n_image_tokens, D),
+                                    jnp.bfloat16, bspec)
+    return batch
+
+
+def _cache_axes_for(path_leaf_shape, batch_first=True):
+    """Logical axes for a cache leaf: batch, cache context dim on axis 1 when
+    it is the long one."""
+    nd = len(path_leaf_shape)
+    if nd == 0:
+        return ()
+    axes = ["batch"] + [None] * (nd - 1)
+    return tuple(axes)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, rules: ShardingRules):
+    """Sharded specs for decode caches: evaluate init_caches abstractly and
+    attach shardings: batch dim -> (pod,data); the context (T) dim of
+    attention caches -> model axis (split-KV decode)."""
+    GB, T = shape.global_batch, shape.seq_len
+
+    caches = jax.eval_shape(lambda: init_caches(cfg, GB, T))
+    model_size = mesh.shape.get("model", 1)
+
+    def to_spec(leaf):
+        # leaf shapes are (L, ...) stacked; find dims:
+        shp = leaf.shape
+        parts = [None] * len(shp)
+        bs = _bspec(mesh, GB)
+        if len(shp) >= 2 and shp[1] == GB and len(bs) and bs[0]:
+            parts[1] = bs[0]
+        # context dim: a dim equal to T or the window size, shard over model
+        for i in range(2, len(shp)):
+            d = shp[i]
+            if d >= 256 and d % model_size == 0 and d in (
+                    T, min(T, cfg.window or T)):
+                parts[i] = "model"
+                break
+        return _sds(mesh, shp, leaf.dtype, P(*parts))
+
+    return jax.tree.map(to_spec, caches)
+
+
+def decode_batch_sds(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    GB, D = shape.global_batch, cfg.d_model
+    bspec = _bspec(mesh, GB)
+    batch = {}
+    if cfg.inputs_embeds:
+        batch["embeds"] = _sds(mesh, (GB, 1, D), jnp.bfloat16, bspec)
+    else:
+        batch["tokens"] = _sds(mesh, (GB, 1), jnp.int32, bspec)
+    if cfg.n_image_tokens:
+        batch["image_embed"] = _sds(mesh, (GB, cfg.n_image_tokens, D),
+                                    jnp.bfloat16, bspec)
+    return batch
+
+
+def param_specs_sharded(cfg: ModelConfig, mesh, rules: ShardingRules):
+    shapes = param_shapes(cfg)
+
+    def one(s):
+        spec = logical_to_spec(rules, s.axes, shape=s.shape, mesh=mesh)
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, shapes)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                rules: ShardingRules):
+    """All step inputs for one cell: (params, extras...) per step kind."""
+    params = param_specs_sharded(cfg, mesh, rules)
+    if shape.kind in ("train", "prefill"):
+        return params, batch_sds(cfg, shape, mesh, rules)
+    return params, cache_specs(cfg, shape, mesh, rules), \
+        decode_batch_sds(cfg, shape, mesh)

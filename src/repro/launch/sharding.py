@@ -1,0 +1,173 @@
+"""Logical-to-physical sharding rules.
+
+Models annotate params/activations with logical axis names; a ShardingRules
+table maps them to mesh axes.  Changing the table (not the model) is the
+sharding lever used by the §Perf hillclimb.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "rules_ctx", "constraint",
+           "logical_to_spec", "param_sharding"]
+
+# logical axis -> mesh axis (or None = replicated).  "batch" maps to the
+# combined (pod, data) axes; "embed"/"heads"/"mlp"/"vocab"/"experts" are the
+# tensor/FSDP dims.
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,           # activations: replicated along model by default
+    "embed_fsdp": ("pod", "data"),  # params+opt: FSDP over pod x data (ZeRO-3)
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,
+    "qk": None, "v": None, "state": None, "conv": None, "lora": None,
+    "image": None,
+}
+
+
+class ShardingRules(dict):
+    def spec(self, axes: tuple) -> P:
+        parts = []
+        for a in axes:
+            m = self.get(a)
+            parts.append(m)
+        return P(*parts)
+
+
+_tls = threading.local()
+
+
+def current_rules():
+    return getattr(_tls, "rules", None), getattr(_tls, "mesh_axes", None)
+
+
+@contextlib.contextmanager
+def rules_ctx(rules: ShardingRules | None, mesh=None):
+    old = (getattr(_tls, "rules", None), getattr(_tls, "mesh_axes", None))
+    _tls.rules = rules
+    if mesh is not None:
+        _tls.mesh_axes = dict(zip(mesh.axis_names, mesh.shape.values())) \
+            if hasattr(mesh, "axis_names") else None
+    elif rules is None:
+        _tls.mesh_axes = None
+    try:
+        yield
+    finally:
+        _tls.rules, _tls.mesh_axes = old
+
+
+def _filter_spec(spec: P, mesh_axes: dict | None, shape=None) -> P:
+    """Drop mesh axes not present in the current mesh, duplicates (first
+    occurrence wins), and axes that do not divide the corresponding dim."""
+    if mesh_axes is None:
+        return spec
+    used: set = set()
+    parts = []
+    for i, part in enumerate(spec):
+        flat = part if isinstance(part, tuple) else (part,)
+        keep = tuple(a for a in flat if a in mesh_axes and a not in used)
+        if shape is not None and keep:
+            sz = 1
+            for a in keep:
+                sz *= mesh_axes[a]
+            if sz and shape[i] % sz != 0:
+                keep = ()
+        used.update(keep)
+        parts.append(keep if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*parts)
+
+
+def constraint(x, axes: tuple):
+    """Activation sharding constraint by logical axes (no-op without rules
+    or outside a mesh context)."""
+    rules, mesh_axes = current_rules()
+    if rules is None:
+        return x
+    spec = _filter_spec(rules.spec(axes), mesh_axes, x.shape)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def param_constraint(x, axes: tuple):
+    """Parameter-rule (embed -> embed_fsdp) sharding constraint; used inside
+    the layer scan to pin per-layer param slices to their FSDP layout so XLA
+    gathers them per-iteration instead of hoisting a whole-stack all-gather
+    out of the loop (a ~params/TP-sized resident buffer otherwise)."""
+    rules, mesh_axes = current_rules()
+    if rules is None or len(axes) != x.ndim:
+        return x
+    parts = []
+    for a in axes:
+        key = "embed_fsdp" if a == "embed" else a
+        parts.append(rules.get(key))
+    spec = _filter_spec(P(*parts), mesh_axes, x.shape)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def logical_to_spec(rules: ShardingRules, axes: tuple,
+                    param: bool = True, shape: tuple | None = None,
+                    mesh=None) -> P:
+    """Resolve logical axes -> PartitionSpec in one shape-aware pass.
+
+    A mesh axis is assigned only if (a) it exists in the mesh, (b) it is not
+    already used by an earlier dim, and (c) it divides the dim.  A later
+    logical axis can therefore pick up a mesh axis an earlier one could not
+    use (e.g. mixtral's 8 experts skip "model"; the per-expert mlp dim takes
+    it instead)."""
+    mesh_axes = dict(zip(mesh.axis_names, mesh.shape.values())) if mesh \
+        else None
+    used: set = set()
+    parts = []
+    for i, a in enumerate(axes):
+        key = "embed_fsdp" if (param and a == "embed") else a
+        cand = rules.get(key)
+        flat = cand if isinstance(cand, tuple) else (cand,)
+        keep = []
+        for ax in flat:
+            if not ax or ax in used:
+                continue
+            if mesh_axes is not None:
+                if ax not in mesh_axes:
+                    continue
+                sz = mesh_axes[ax]
+                dim = shape[i] if shape is not None else None
+                cur = 1
+                for k in keep:
+                    cur *= mesh_axes[k]
+                if dim is not None and dim % (cur * sz) != 0:
+                    continue
+            keep.append(ax)
+        for ax in keep:
+            used.add(ax)
+        parts.append(tuple(keep) if len(keep) > 1 else
+                     (keep[0] if keep else None))
+    return P(*parts)
+
+
+def param_sharding(mesh, rules: ShardingRules, spec_tree):
+    """ShapeDtypeStruct tree (with .axes) -> tree with NamedSharding attached."""
+    def one(s):
+        axes = getattr(s, "axes", None)
+        if axes is None:
+            return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                        sharding=NamedSharding(mesh, P()))
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(mesh, logical_to_spec(
+                rules, axes, shape=s.shape, mesh=mesh)))
+    return jax.tree.map(one, spec_tree)

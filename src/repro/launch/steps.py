@@ -1,0 +1,121 @@
+"""Step builders: train_step (fwd+bwd+AdamW, remat, microbatching) and
+serve_step (one-token decode over caches).  These are what the dry-run
+lowers and what the real launchers run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, loss_fn
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, adamw_state_shapes
+from .sharding import ShardingRules, rules_ctx
+
+__all__ = ["TrainConfig", "build_train_step", "build_serve_step",
+           "opt_state_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    remat: str = "full"          # none | dots | dots_no_batch | full
+    microbatch: int = 1          # gradient-accumulation steps
+    unroll: bool = False         # metering builds (roofline)
+    scan_param_fsdp: bool = False  # per-layer FSDP gather inside the scan
+    grad_accum_dtype: str = "float32"   # bf16 halves the accumulation buffer
+    optim: AdamWConfig = AdamWConfig()
+
+
+def opt_state_specs(cfg: ModelConfig, mesh, rules: ShardingRules,
+                    tcfg: TrainConfig):
+    from .inputs import param_specs_sharded
+    from repro.models import param_shapes
+    pspecs = param_shapes(cfg)
+    state_shapes = adamw_state_shapes(pspecs, tcfg.optim)
+    # reuse param sharding resolution on the mirrored axes
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from .sharding import logical_to_spec
+
+    def one(s):
+        axes = getattr(s, "axes", None)
+        if axes is None or len(axes) != len(s.shape):
+            return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                        sharding=NamedSharding(mesh, P()))
+        spec = logical_to_spec(rules, axes, shape=s.shape, mesh=mesh)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, state_shapes)
+
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                     rules: ShardingRules | None = None, mesh=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Microbatching scans over accumulation chunks."""
+
+    def compute_grads(params, batch):
+        def loss(p):
+            l, m = loss_fn(p, cfg, batch, remat=tcfg.remat,
+                           unroll=tcfg.unroll,
+                           scan_param_fsdp=tcfg.scan_param_fsdp)
+            return l, m
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        return l, grads, metrics
+
+    def train_step(params, opt_state, batch):
+        with rules_ctx(rules, mesh):
+            if tcfg.microbatch > 1:
+                mb = tcfg.microbatch
+                split = jax.tree.map(
+                    lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                    batch)
+                acc_dt = {"float32": jnp.float32,
+                          "bfloat16": jnp.bfloat16}[tcfg.grad_accum_dtype]
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+                def body(acc, chunk):
+                    loss_acc, g_acc = acc
+                    l, g, _ = compute_grads(params, chunk)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                    return (loss_acc + l, g_acc), None
+
+                (l, grads), _ = jax.lax.scan(
+                    body, (jnp.zeros((), jnp.float32), zeros), split)
+                l = l / mb
+                grads = jax.tree.map(lambda g: g / mb, grads)
+            else:
+                l, grads, _ = compute_grads(params, batch)
+            params, opt_state, om = adamw_update(params, grads, opt_state,
+                                                 tcfg.optim)
+            return params, opt_state, {"loss": l, **om}
+
+    return train_step
+
+
+def build_serve_step(cfg: ModelConfig, rules: ShardingRules | None = None,
+                     mesh=None, unroll: bool = False):
+    """serve_step(params, caches, batch) -> (logits, caches): one new token
+    against a pre-filled KV/state cache (the decode_* and long_* cells)."""
+
+    def serve_step(params, caches, batch):
+        with rules_ctx(rules, mesh):
+            logits, caches = decode_step(
+                params, cfg, caches,
+                tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+                aux={k: v for k, v in batch.items() if k == "image_embed"},
+                unroll=unroll)
+            return logits, caches
+
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, rng):
+    from repro.models import init_params
+    params = init_params(cfg, rng)
+    return params, adamw_init(params, tcfg.optim)

@@ -1,0 +1,52 @@
+"""Training launcher (end-to-end driver).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --steps 50 --seq 128 --batch 8 [--smoke]
+
+Runs the real Trainer (data pipeline -> jit train step -> async checkpoints)
+on whatever devices exist; on the CPU container use --smoke for the reduced
+config.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-sized)")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    import numpy as np
+    from repro.configs import get_config, get_smoke_config
+    from repro.data.pipeline import DataConfig, TokenDataset, synthetic_tokens
+    from repro.train.trainer import Trainer, TrainerConfig
+    from repro.launch.steps import TrainConfig
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      vocab=cfg.vocab)
+    tokens = synthetic_tokens(args.seq * args.batch * (args.steps + 4) + 1,
+                              cfg.vocab)
+    ds = TokenDataset(tokens, dcfg)
+    if not args.resume:
+        import shutil
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    tr = Trainer(cfg, TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                                    train=TrainConfig(remat="none")), ds)
+    out = tr.run()
+    first, last = out["losses"][0], out["losses"][-1]
+    print(f"step {first[0]}: loss {first[1]:.4f}  ->  "
+          f"step {last[0]}: loss {last[1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Composable model stack for the assigned architectures."""
+
+from .config import ModelConfig, StageSpec
+from .model import (param_shapes, init_params, forward, loss_fn, decode_step,
+                    init_caches, execution_runs)
+
+__all__ = ["ModelConfig", "StageSpec", "param_shapes", "init_params",
+           "forward", "loss_fn", "decode_step", "init_caches",
+           "execution_runs"]

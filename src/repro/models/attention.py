@@ -1,0 +1,302 @@
+"""Attention variants: GQA (with RoPE / bias / sliding window), MLA
+(DeepSeek-V2 latent compression), and gated cross-attention (Llama-3.2
+vision).  Each has a train-time (full-sequence) form and a decode form over
+a KV cache.
+
+The XLA path here is what the dry-run lowers; a fused Pallas flash kernel is
+a TODO hook (kernels are only written for the paper's hot spots — attention
+is already near-roofline under XLA on TPU for these shapes, see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Spec, rope, shard
+
+__all__ = ["gqa_shapes", "gqa_attention", "gqa_decode",
+           "mla_shapes", "mla_attention", "mla_decode",
+           "cross_attn_shapes", "cross_attention"]
+
+NEG_INF = -1e30
+
+
+FLASH_THRESHOLD = 2048   # S*T above threshold^2 -> chunked online-softmax
+FLASH_KV_CHUNK = 512
+UNROLL_CHUNKS = False    # metering builds: python-loop the chunk scan so
+                         # cost_analysis counts every chunk exactly
+
+
+def _sdpa_dense(q, k, v, mask):
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    q = q.reshape(B, S, KV, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k) / jnp.sqrt(hd).astype(q.dtype)
+    scores = scores.astype(jnp.float32) + mask
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def _sdpa_chunked(q, k, v, window):
+    """Flash-style causal attention: scan over KV chunks with online softmax.
+    Never materializes (S, T) scores — memory O(S * chunk).  Assumes
+    self-attention with S == T (train/prefill)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    g = H // KV
+    ck = min(FLASH_KV_CHUNK, T)
+    n_chunks = T // ck
+    assert T % ck == 0, (T, ck)
+    qr = q.reshape(B, S, KV, g, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kc = k.reshape(B, n_chunks, ck, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, ck, KV, vd).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(S)[:, None]
+
+    m0 = jnp.full((B, KV, g, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, g, S), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, g, vd), jnp.float32)
+
+    def body(carry, inputs):
+        m, l, acc, ci = carry[0], carry[1], carry[2], carry[3]
+        kch, vch = inputs
+        s = jnp.einsum("bskgh,btkh->bkgst", qr, kch).astype(jnp.float32) * scale
+        kpos = ci * ck + jnp.arange(ck)[None, :]
+        ok = kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard -inf - -inf
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(ok[None, None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), vch
+                        ).astype(jnp.float32)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l, acc, ci + 1), None
+
+    # checkpoint the chunk step: backward recomputes per-chunk scores/probs
+    # instead of stacking them across chunks (true flash backward).
+    if UNROLL_CHUNKS:
+        carry = (m0, l0, a0, jnp.int32(0))
+        for ci in range(n_chunks):
+            carry, _ = body(carry, (kc[ci], vc[ci]))
+        m, l, acc, _ = carry
+    else:
+        (m, l, acc, _), _ = jax.lax.scan(
+            jax.checkpoint(body), (m0, l0, a0, jnp.int32(0)), (kc, vc))
+    lt = jnp.maximum(l.transpose(0, 3, 1, 2)[..., None], 1e-30)
+    out = (acc / lt).astype(v.dtype)
+    return out.reshape(B, S, H, vd)
+
+
+def _sdpa(q, k, v, mask, window=None, chunked=None):
+    """q (B,S,H,hd), k (B,T,KV,hd), v (B,T,KV,vd); mask (S,T) additive or
+    None for chunked causal.  Chunked path auto-selected for long self-attn."""
+    S, T = q.shape[1], k.shape[1]
+    if chunked is None:
+        chunked = (S == T and S * T > FLASH_THRESHOLD ** 2)
+    if chunked and S == T:
+        return _sdpa_chunked(q, k, v, window)
+    return _sdpa_dense(q, k, v, mask)
+
+
+def causal_mask(S: int, T: int, window: int | None = None):
+    """(S, T) additive mask; queries at positions T-S..T-1."""
+    qpos = jnp.arange(T - S, T)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------------ GQA
+
+def gqa_shapes(cfg, dtype):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": Spec((D, H * hd), dtype, ("embed", "heads")),
+        "wk": Spec((D, KV * hd), dtype, ("embed", "kv_heads")),
+        "wv": Spec((D, KV * hd), dtype, ("embed", "kv_heads")),
+        "wo": Spec((H * hd, D), dtype, ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = Spec((H * hd,), dtype, ("heads",))
+        p["bk"] = Spec((KV * hd,), dtype, ("kv_heads",))
+        p["bv"] = Spec((KV * hd,), dtype, ("kv_heads",))
+    return p
+
+
+def _qkv(x, p, cfg):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, KV, hd),
+            v.reshape(B, S, KV, hd))
+
+
+def gqa_attention(x, p, cfg, positions=None, window=None):
+    """Full-sequence causal attention. x (B,S,D)."""
+    B, S, D = x.shape
+    q, k, v = _qkv(x, p, cfg)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, ("batch", "seq", "heads", None))
+    k = shard(k, ("batch", "seq", "kv_heads", None))
+    if S * S > FLASH_THRESHOLD ** 2:
+        out = _sdpa(q, k, v, None, window=window, chunked=True)
+    else:
+        out = _sdpa(q, k, v, causal_mask(S, S, window), window=window)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ p["wo"]
+
+
+def gqa_decode(x, p, cfg, cache, window=None):
+    """One-token decode. x (B,1,D); cache dict with k/v (B,T,KV,hd) ring or
+    linear buffer and pos () int32.  Returns (out, new_cache)."""
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    pos = cache["pos"]
+    q, k, v = _qkv(x, p, cfg)
+    posb = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    q = rope(q, posb, cfg.rope_theta)
+    k = rope(k, posb, cfg.rope_theta)
+    slot = ((pos % T) if window is not None
+            else jnp.minimum(pos, T - 1)).astype(jnp.int32)
+    z = jnp.int32(0)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (z, slot, z, z))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (z, slot, z, z))
+    kpos = jnp.arange(T)
+    if window is not None:
+        # ring buffer: valid entries are the last min(pos+1, T) writes
+        age = pos - ((pos - kpos) % T)      # absolute position of each slot
+        ok = (age >= 0) & (age >= pos - (window - 1)) & (age <= pos)
+    else:
+        ok = kpos <= pos
+    mask = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+    out = _sdpa(q, ck, cv, mask)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, {"k": ck, "v": cv, "pos": pos + 1}
+
+
+# ------------------------------------------------------------------------ MLA
+
+def mla_shapes(cfg, dtype):
+    """DeepSeek-V2 multi-head latent attention (no q-lora in the Lite cfg)."""
+    D, H = cfg.d_model, cfg.n_heads
+    nope, rpe, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    return {
+        "wq": Spec((D, H * (nope + rpe)), dtype, ("embed", "heads")),
+        "wkv_a": Spec((D, r + rpe), dtype, ("embed", "lora")),
+        "kv_norm": Spec((r,), jnp.float32, ("lora",)),
+        "wkv_b": Spec((r, H * (nope + vd)), dtype, ("lora", "heads")),
+        "wo": Spec((H * vd, D), dtype, ("heads", "embed")),
+    }
+
+
+def mla_attention(x, p, cfg, positions=None):
+    from .layers import rms_norm
+    B, S, D = x.shape
+    H = cfg.n_heads
+    nope, rpe, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q = (x @ p["wq"]).reshape(B, S, H, nope + rpe)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ p["wkv_a"]                              # (B,S,r+rpe)
+    c_kv = rms_norm(kv[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(kv[..., None, r:], positions, cfg.rope_theta)  # (B,S,1,rpe)
+    kvb = (c_kv @ p["wkv_b"]).reshape(B, S, H, nope + vd)
+    k_nope, v = kvb[..., :nope], kvb[..., nope:]
+    k_rope_b = jnp.broadcast_to(k_rope, (B, S, H, rpe))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    if S * S > FLASH_THRESHOLD ** 2:
+        out = _sdpa(q_full, k_full, v, None, chunked=True)   # H == KV here
+    else:
+        out = _sdpa(q_full, k_full, v, causal_mask(S, S))
+    out = out.reshape(B, S, H * vd)
+    return out @ p["wo"]
+
+
+def mla_decode(x, p, cfg, cache):
+    """Decode with the *compressed* cache: (c_kv (B,T,r), k_rope (B,T,rpe)).
+    This is MLA's payoff — cache bytes ~ r+rpe per token instead of
+    2*H*hd."""
+    from .layers import rms_norm
+    B = x.shape[0]
+    H = cfg.n_heads
+    nope, rpe, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    T = cache["c_kv"].shape[1]
+    pos = cache["pos"]
+    posb = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    q = (x @ p["wq"]).reshape(B, 1, H, nope + rpe)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, posb, cfg.rope_theta)
+    kv = x @ p["wkv_a"]
+    c_new = rms_norm(kv[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope_new = rope(kv[..., None, r:], posb, cfg.rope_theta)[:, :, 0, :]
+    slot = jnp.minimum(pos, T - 1).astype(jnp.int32)
+    z = jnp.int32(0)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (z, slot, z))
+    kr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (z, slot, z))
+    # absorbed attention: score = q_nope . (c @ Wb_k) + q_rope . k_rope
+    wkv_b = p["wkv_b"].reshape(r, H, nope + vd)
+    wb_k, wb_v = wkv_b[..., :nope], wkv_b[..., nope:]
+    q_lat = jnp.einsum("bohn,rhn->bohr", q_nope, wb_k)      # (B,1,H,r)
+    s_lat = jnp.einsum("bohr,btr->bhot", q_lat, c_kv)
+    s_rope = jnp.einsum("bohp,btp->bhot", q_rope, kr)
+    scale = 1.0 / jnp.sqrt(nope + rpe).astype(jnp.float32)
+    scores = (s_lat + s_rope).astype(jnp.float32) * scale
+    ok = jnp.arange(T) <= pos
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhot,btr->bohr", probs, c_kv)       # (B,1,H,r)
+    out = jnp.einsum("bohr,rhv->bohv", o_lat, wb_v)
+    out = out.reshape(B, 1, H * vd) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": kr, "pos": pos + 1}
+
+
+# ----------------------------------------------------------------- cross-attn
+
+def cross_attn_shapes(cfg, dtype):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": Spec((D, H * hd), dtype, ("embed", "heads")),
+        "wk": Spec((D, KV * hd), dtype, ("embed", "kv_heads")),
+        "wv": Spec((D, KV * hd), dtype, ("embed", "kv_heads")),
+        "wo": Spec((H * hd, D), dtype, ("heads", "embed")),
+        "gate": Spec((1,), jnp.float32, (None,)),
+    }
+
+
+def cross_attention(x, kv_src, p, cfg):
+    """Gated cross-attention (Llama-3.2 vision).  kv_src (B, I, D) image
+    embeddings; output is tanh-gated (zero-init -> identity at init)."""
+    B, S, D = x.shape
+    I = kv_src.shape[1]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (kv_src @ p["wk"]).reshape(B, I, KV, hd)
+    v = (kv_src @ p["wv"]).reshape(B, I, KV, hd)
+    mask = jnp.zeros((S, I), jnp.float32)
+    out = _sdpa(q, k, v, mask)
+    out = out.reshape(B, S, H * hd) @ p["wo"]
+    return out * jnp.tanh(p["gate"]).astype(out.dtype)

@@ -1,0 +1,322 @@
+"""Transformer block variants, each with shapes / forward / decode.
+
+Block contract:
+  shapes(cfg, dtype)                         -> param pytree of layers.Spec
+  forward(x, p, cfg, aux)                    -> (x, aux_loss)
+  decode(x, p, cfg, cache, aux)              -> (x, new_cache)
+  init_cache(cfg, B, T, dtype)               -> cache pytree (zeros / specs)
+
+aux carries cross-modal inputs (image embeddings) and layer metadata.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .attention import (cross_attention, cross_attn_shapes, gqa_attention,
+                        gqa_decode, gqa_shapes, mla_attention, mla_decode,
+                        mla_shapes)
+from .layers import Spec, apply_norm, glu_mlp, mlp_shapes, norm_shapes
+from .moe import moe_ffn, moe_shapes
+from .ssm import (mamba, mamba_decode, mamba_shapes, mlstm, mlstm_decode,
+                  mlstm_shapes, slstm, slstm_decode, slstm_shapes, _dt_rank)
+
+__all__ = ["BLOCKS", "Block"]
+
+
+def _zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+# --------------------------------------------------------------- attn_mlp
+
+class AttnMlp:
+    """Pre-norm GQA attention + gated MLP; optional parallel block
+    (command-r) and sliding window."""
+
+    @staticmethod
+    def shapes(cfg, dtype):
+        p = {
+            "ln1": norm_shapes(cfg, jnp.float32),
+            "attn": gqa_shapes(cfg, dtype),
+            "mlp": mlp_shapes(cfg, cfg.d_ff, dtype),
+        }
+        if not cfg.parallel_block:
+            p["ln2"] = norm_shapes(cfg, jnp.float32)
+        return p
+
+    @staticmethod
+    def forward(x, p, cfg, aux):
+        if cfg.parallel_block:
+            h = apply_norm(x, p["ln1"], cfg)
+            return x + gqa_attention(h, p["attn"], cfg, window=cfg.window) \
+                + glu_mlp(h, p["mlp"], cfg.act), 0.0
+        h = apply_norm(x, p["ln1"], cfg)
+        x = x + gqa_attention(h, p["attn"], cfg, window=cfg.window)
+        h = apply_norm(x, p["ln2"], cfg)
+        return x + glu_mlp(h, p["mlp"], cfg.act), 0.0
+
+    @staticmethod
+    def decode(x, p, cfg, cache, aux):
+        if cfg.parallel_block:
+            h = apply_norm(x, p["ln1"], cfg)
+            a, cache = gqa_decode(h, p["attn"], cfg, cache, window=cfg.window)
+            return x + a + glu_mlp(h, p["mlp"], cfg.act), cache
+        h = apply_norm(x, p["ln1"], cfg)
+        a, cache = gqa_decode(h, p["attn"], cfg, cache, window=cfg.window)
+        x = x + a
+        h = apply_norm(x, p["ln2"], cfg)
+        return x + glu_mlp(h, p["mlp"], cfg.act), cache
+
+    @staticmethod
+    def init_cache(cfg, B, T, dtype):
+        Tc = min(T, cfg.window) if cfg.window else T
+        kv = (B, Tc, cfg.n_kv_heads, cfg.hd)
+        return {"k": _zeros(kv, dtype), "v": _zeros(kv, dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+
+
+# --------------------------------------------------------------- attn_moe
+
+class AttnMoe(AttnMlp):
+    @staticmethod
+    def shapes(cfg, dtype):
+        return {
+            "ln1": norm_shapes(cfg, jnp.float32),
+            "attn": gqa_shapes(cfg, dtype),
+            "ln2": norm_shapes(cfg, jnp.float32),
+            "moe": moe_shapes(cfg, dtype),
+        }
+
+    @staticmethod
+    def forward(x, p, cfg, aux):
+        h = apply_norm(x, p["ln1"], cfg)
+        x = x + gqa_attention(h, p["attn"], cfg, window=cfg.window)
+        h = apply_norm(x, p["ln2"], cfg)
+        y, aux_l = moe_ffn(h, p["moe"], cfg, cfg.act)
+        return x + y, aux_l
+
+    @staticmethod
+    def decode(x, p, cfg, cache, aux):
+        h = apply_norm(x, p["ln1"], cfg)
+        a, cache = gqa_decode(h, p["attn"], cfg, cache, window=cfg.window)
+        x = x + a
+        h = apply_norm(x, p["ln2"], cfg)
+        y, _ = moe_ffn(h, p["moe"], cfg, cfg.act, capacity_factor=2.0)
+        return x + y, cache
+
+
+# --------------------------------------------------------------- mla_moe
+
+class MlaMoe:
+    @staticmethod
+    def shapes(cfg, dtype):
+        return {
+            "ln1": norm_shapes(cfg, jnp.float32),
+            "attn": mla_shapes(cfg, dtype),
+            "ln2": norm_shapes(cfg, jnp.float32),
+            "moe": moe_shapes(cfg, dtype),
+        }
+
+    @staticmethod
+    def forward(x, p, cfg, aux):
+        h = apply_norm(x, p["ln1"], cfg)
+        x = x + mla_attention(h, p["attn"], cfg)
+        h = apply_norm(x, p["ln2"], cfg)
+        y, aux_l = moe_ffn(h, p["moe"], cfg, cfg.act)
+        return x + y, aux_l
+
+    @staticmethod
+    def decode(x, p, cfg, cache, aux):
+        h = apply_norm(x, p["ln1"], cfg)
+        a, cache = mla_decode(h, p["attn"], cfg, cache)
+        x = x + a
+        h = apply_norm(x, p["ln2"], cfg)
+        y, _ = moe_ffn(h, p["moe"], cfg, cfg.act, capacity_factor=2.0)
+        return x + y, cache
+
+    @staticmethod
+    def init_cache(cfg, B, T, dtype):
+        return {"c_kv": _zeros((B, T, cfg.kv_lora_rank), dtype),
+                "k_rope": _zeros((B, T, cfg.qk_rope_dim), dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+
+
+# ------------------------------------------------------------- mla_dense
+
+class MlaDense(MlaMoe):
+    """DeepSeek prologue layer: MLA attention + dense MLP."""
+
+    @staticmethod
+    def shapes(cfg, dtype):
+        return {
+            "ln1": norm_shapes(cfg, jnp.float32),
+            "attn": mla_shapes(cfg, dtype),
+            "ln2": norm_shapes(cfg, jnp.float32),
+            "mlp": mlp_shapes(cfg, cfg.d_ff, dtype),
+        }
+
+    @staticmethod
+    def forward(x, p, cfg, aux):
+        h = apply_norm(x, p["ln1"], cfg)
+        x = x + mla_attention(h, p["attn"], cfg)
+        h = apply_norm(x, p["ln2"], cfg)
+        return x + glu_mlp(h, p["mlp"], cfg.act), 0.0
+
+    @staticmethod
+    def decode(x, p, cfg, cache, aux):
+        h = apply_norm(x, p["ln1"], cfg)
+        a, cache = mla_decode(h, p["attn"], cfg, cache)
+        x = x + a
+        h = apply_norm(x, p["ln2"], cfg)
+        return x + glu_mlp(h, p["mlp"], cfg.act), cache
+
+
+# ----------------------------------------------------------------- hybrid
+
+class Hybrid:
+    """Hymba: attention and mamba heads in parallel on the same input,
+    outputs normalized and averaged; then MLP."""
+
+    @staticmethod
+    def shapes(cfg, dtype):
+        return {
+            "ln1": norm_shapes(cfg, jnp.float32),
+            "attn": gqa_shapes(cfg, dtype),
+            "mamba": mamba_shapes(cfg, dtype),
+            "na": norm_shapes(cfg, jnp.float32),
+            "nm": norm_shapes(cfg, jnp.float32),
+            "ln2": norm_shapes(cfg, jnp.float32),
+            "mlp": mlp_shapes(cfg, cfg.d_ff, dtype),
+        }
+
+    @staticmethod
+    def forward(x, p, cfg, aux):
+        h = apply_norm(x, p["ln1"], cfg)
+        a = gqa_attention(h, p["attn"], cfg, window=cfg.window)
+        m = mamba(h, p["mamba"], cfg)
+        mix = 0.5 * (apply_norm(a, p["na"], cfg) + apply_norm(m, p["nm"], cfg))
+        x = x + mix
+        h = apply_norm(x, p["ln2"], cfg)
+        return x + glu_mlp(h, p["mlp"], cfg.act), 0.0
+
+    @staticmethod
+    def decode(x, p, cfg, cache, aux):
+        h = apply_norm(x, p["ln1"], cfg)
+        a, ac = gqa_decode(h, p["attn"], cfg, cache["attn"], window=cfg.window)
+        m, mc = mamba_decode(h, p["mamba"], cfg, cache["mamba"])
+        mix = 0.5 * (apply_norm(a, p["na"], cfg) + apply_norm(m, p["nm"], cfg))
+        x = x + mix
+        h = apply_norm(x, p["ln2"], cfg)
+        return x + glu_mlp(h, p["mlp"], cfg.act), {"attn": ac, "mamba": mc}
+
+    @staticmethod
+    def init_cache(cfg, B, T, dtype):
+        Tc = min(T, cfg.window) if cfg.window else T
+        Di = cfg.ssm_expand * cfg.d_model
+        return {
+            "attn": AttnMlp.init_cache(cfg, B, T, dtype),
+            "mamba": {"h": _zeros((B, Di, cfg.ssm_state), jnp.float32),
+                      "conv": _zeros((B, cfg.ssm_conv - 1, Di), dtype)},
+        }
+
+
+# ------------------------------------------------------------------ xLSTM
+
+class MLstm:
+    @staticmethod
+    def shapes(cfg, dtype):
+        return {"ln1": norm_shapes(cfg, jnp.float32),
+                "cell": mlstm_shapes(cfg, dtype)}
+
+    @staticmethod
+    def forward(x, p, cfg, aux):
+        return x + mlstm(apply_norm(x, p["ln1"], cfg), p["cell"], cfg), 0.0
+
+    @staticmethod
+    def decode(x, p, cfg, cache, aux):
+        y, cache = mlstm_decode(apply_norm(x, p["ln1"], cfg), p["cell"], cfg,
+                                cache)
+        return x + y, cache
+
+    @staticmethod
+    def init_cache(cfg, B, T, dtype):
+        H = cfg.n_heads
+        hd = cfg.mlstm_pf * cfg.d_model // H
+        return {"C": _zeros((B, H, hd, hd), jnp.float32),
+                "n": _zeros((B, H, hd), jnp.float32),
+                "m": _zeros((B, H), jnp.float32)}
+
+
+class SLstm:
+    @staticmethod
+    def shapes(cfg, dtype):
+        return {"ln1": norm_shapes(cfg, jnp.float32),
+                "cell": slstm_shapes(cfg, dtype)}
+
+    @staticmethod
+    def forward(x, p, cfg, aux):
+        return x + slstm(apply_norm(x, p["ln1"], cfg), p["cell"], cfg), 0.0
+
+    @staticmethod
+    def decode(x, p, cfg, cache, aux):
+        y, cache = slstm_decode(apply_norm(x, p["ln1"], cfg), p["cell"], cfg,
+                                cache)
+        return x + y, cache
+
+    @staticmethod
+    def init_cache(cfg, B, T, dtype):
+        H = cfg.slstm_heads
+        dh = cfg.d_model // H
+        z = (B, H, dh)
+        return {"c": _zeros(z, jnp.float32), "n": _zeros(z, jnp.float32),
+                "h": _zeros(z, jnp.float32), "m": _zeros((B, H), jnp.float32)}
+
+
+# ---------------------------------------------------------- cross_attn_mlp
+
+class CrossAttnMlp:
+    """Llama-3.2-vision cross-attention layer: gated cross-attn to image
+    embeddings + MLP (self-attn free, per the HF architecture)."""
+
+    @staticmethod
+    def shapes(cfg, dtype):
+        return {
+            "ln1": norm_shapes(cfg, jnp.float32),
+            "xattn": cross_attn_shapes(cfg, dtype),
+            "ln2": norm_shapes(cfg, jnp.float32),
+            "mlp": mlp_shapes(cfg, cfg.d_ff, dtype),
+            "mlp_gate": Spec((1,), jnp.float32, (None,)),
+        }
+
+    @staticmethod
+    def forward(x, p, cfg, aux):
+        img = aux["image_embed"]          # (B, I, D)
+        h = apply_norm(x, p["ln1"], cfg)
+        x = x + cross_attention(h, img, p["xattn"], cfg)
+        h = apply_norm(x, p["ln2"], cfg)
+        y = glu_mlp(h, p["mlp"], cfg.act)
+        return x + y * jnp.tanh(p["mlp_gate"]).astype(y.dtype), 0.0
+
+    @staticmethod
+    def decode(x, p, cfg, cache, aux):
+        # image KV is static during decode; cache holds projected k/v
+        out, _ = CrossAttnMlp.forward(x, p, cfg, aux)
+        return out, cache
+
+    @staticmethod
+    def init_cache(cfg, B, T, dtype):
+        return {"pos": jnp.zeros((), jnp.int32)}
+
+
+BLOCKS = {
+    "attn_mlp": AttnMlp,
+    "attn_moe": AttnMoe,
+    "mla_moe": MlaMoe,
+    "mla_dense": MlaDense,
+    "hybrid": Hybrid,
+    "mlstm": MLstm,
+    "slstm": SLstm,
+    "cross_attn_mlp": CrossAttnMlp,
+}
+Block = BLOCKS  # alias

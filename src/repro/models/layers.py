@@ -1,0 +1,117 @@
+"""Shared layers: norms, rotary embeddings, GLU MLPs, logical sharding axes.
+
+Every parameter is annotated with *logical* axis names (a tuple parallel to
+its shape).  launch/mesh.py maps logical names -> physical mesh axes; models
+never mention "data"/"model" directly, which is what makes the sharding
+hillclimb a pure config change.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Spec", "rms_norm", "layer_norm", "rope", "glu_mlp",
+           "mlp_shapes", "norm_shapes", "shard", "cross_entropy"]
+
+
+class Spec(jax.ShapeDtypeStruct):
+    """ShapeDtypeStruct + logical axis names."""
+
+    def __init__(self, shape, dtype, axes):
+        super().__init__(shape, dtype)
+        assert len(axes) == len(shape), (shape, axes)
+        self.axes = tuple(axes)
+
+
+def shard(x: jnp.ndarray, axes: tuple):
+    """Logical sharding constraint on activations; resolved by the launcher
+    via jax.sharding use_mesh context (no-op without a mesh)."""
+    from repro.launch.sharding import constraint  # late import (no jax dep cycle)
+    return constraint(x, axes)
+
+
+# ---------------------------------------------------------------------- norms
+
+def rms_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, cfg):
+    if cfg.norm_type == "ln":
+        return layer_norm(x, p, cfg.norm_eps)
+    return rms_norm(x, p, cfg.norm_eps)
+
+
+def norm_shapes(cfg, dtype):
+    return Spec((cfg.d_model,), dtype, ("embed",))
+
+
+# ----------------------------------------------------------------------- rope
+
+def rope(x, positions, theta: float, rotary_dim: int | None = None):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    rd = rotary_dim or hd
+    half = rd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / rd))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:rd].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    if rd < hd:
+        out = jnp.concatenate([out, x[..., rd:]], axis=-1)
+    return out
+
+
+# ------------------------------------------------------------------------ mlp
+
+def glu_mlp(x, p, act: str):
+    """Gated MLP w2(act(x@w1) * (x@w3)), or plain w2(act(x@w1)) when the
+    config has no gate branch (musicgen)."""
+    h = x @ p["w1"]
+    a = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+    h = a * (x @ p["w3"]) if "w3" in p else a
+    h = shard(h, ("batch", "seq", "mlp"))
+    return h @ p["w2"]
+
+
+def mlp_shapes(cfg, d_ff: int, dtype, prefix="layers"):
+    D, F = cfg.d_model, d_ff
+    p = {
+        "w1": Spec((D, F), dtype, ("embed", "mlp")),
+        "w2": Spec((F, D), dtype, ("mlp", "embed")),
+    }
+    if getattr(cfg, "glu", True):
+        p["w3"] = Spec((D, F), dtype, ("embed", "mlp"))
+    return p
+
+
+# ----------------------------------------------------------------------- loss
+
+def cross_entropy(logits, labels, softcap: float = 0.0):
+    """Mean token NLL in f32.  logits (B, S, V); labels (B, S) int."""
+    lg = logits.astype(jnp.float32)
+    if softcap:
+        lg = jnp.tanh(lg / softcap) * softcap
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

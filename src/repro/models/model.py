@@ -1,0 +1,276 @@
+"""Model assembly: embedding -> staged block stack (scan over layers) ->
+norm -> LM head.  One code path serves all 10 assigned architectures via
+ModelConfig.pattern.
+
+Scan-over-layers keeps compile time flat in depth (critical for the 512-dev
+dry-run); heterogeneous stacks execute as RLE-merged runs of homogeneous
+scans sliced out of per-stage stacked params, preserving the exact interleave
+(e.g. xLSTM's 7 mLSTM : 1 sLSTM).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import BLOCKS
+from .config import ModelConfig
+from .layers import Spec, apply_norm, cross_entropy, norm_shapes, shard
+
+__all__ = ["param_shapes", "init_params", "forward", "loss_fn",
+           "decode_step", "init_caches", "execution_runs"]
+
+
+def _dtype(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _stack_shapes(shapes, L):
+    return jax.tree.map(
+        lambda s: Spec((L,) + s.shape, s.dtype, ("layers",) + s.axes), shapes)
+
+
+def _stage_key(kind: str, si: int, block: str) -> str:
+    return f"{kind}{si}_{block}"
+
+
+def param_shapes(cfg: ModelConfig):
+    dt = _dtype(cfg)
+    D, V = cfg.d_model, cfg.vocab
+    p = {}
+    if not cfg.inputs_embeds:
+        p["embed"] = Spec((V, D), dt, ("vocab", "embed"))
+    stages = {}
+    for si, st in enumerate(cfg.prologue):
+        stages[_stage_key("pro", si, st.block)] = _stack_shapes(
+            BLOCKS[st.block].shapes(cfg, dt), st.layers)
+    for si, st in enumerate(cfg.pattern):
+        stages[_stage_key("s", si, st.block)] = _stack_shapes(
+            BLOCKS[st.block].shapes(cfg, dt), st.layers * cfg.n_units)
+    p["stages"] = stages
+    p["final_norm"] = norm_shapes(cfg, jnp.float32)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = Spec((D, V), dt, ("embed", "vocab"))
+    return p
+
+
+def init_params(cfg: ModelConfig, rng):
+    """Real initialization (smoke tests / small trains), decided by path:
+    norms -> ones, gates/biases -> zeros, matrices -> trunc-normal 0.02."""
+    shapes = param_shapes(cfg)
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    rngs = jax.random.split(rng, len(paths_and_leaves))
+
+    def name_of(path):
+        return "/".join(str(getattr(k, "key", k)) for k in path).lower()
+
+    def one(r, path, s):
+        nm = name_of(path)
+        if any(t in nm for t in ("norm", "ln1", "ln2", "/na", "/nm")):
+            return jnp.ones(s.shape, s.dtype)
+        if "gate" in nm:
+            return jnp.zeros(s.shape, s.dtype)
+        if "a_log" in nm:  # mamba: A in [-N..-1]
+            n = s.shape[-1]
+            return jnp.broadcast_to(
+                jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), s.shape
+            ).astype(s.dtype)
+        if "dskip" in nm:
+            return jnp.ones(s.shape, s.dtype)
+        if len(s.shape) >= 2:
+            return (jax.random.normal(r, s.shape, jnp.float32) * 0.02
+                    ).astype(s.dtype)
+        return jnp.zeros(s.shape, s.dtype)  # biases
+
+    leaves = [one(r, p, s) for r, (p, s) in zip(rngs, paths_and_leaves)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def execution_runs(cfg: ModelConfig):
+    """Ordered (stage_key, offset, count, block) runs, RLE-merged."""
+    raw = []
+    for si, st in enumerate(cfg.prologue):
+        raw.append([_stage_key("pro", si, st.block), 0, st.layers, st.block])
+    for u in range(cfg.n_units):
+        for si, st in enumerate(cfg.pattern):
+            raw.append([_stage_key("s", si, st.block), u * st.layers,
+                        st.layers, st.block])
+    merged = []
+    for r in raw:
+        if merged and merged[-1][0] == r[0] and \
+                merged[-1][1] + merged[-1][2] == r[1]:
+            merged[-1][2] += r[2]
+        else:
+            merged.append(list(r))
+    return [tuple(m) for m in merged]
+
+
+def _slice_stage(stage_params, off, cnt):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, off, off + cnt,
+                                                       axis=0), stage_params)
+
+
+def _remat_wrap(fn, remat: str | None):
+    if remat in (None, "none"):
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if remat == "dots_no_batch":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(remat)
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, aux=None,
+            remat: str | None = "full", last_only: bool = False,
+            unroll: bool = False, scan_param_fsdp: bool = False):
+    """Returns (logits (B,S,V), aux_loss ()).  tokens (B,S) int32 or
+    embeds (B,S,D).  last_only: project only the final position (serving
+    prefill — avoids the (B,S,V) logits tensor).  unroll: python loop over
+    layers instead of lax.scan (metering builds: cost_analysis counts scan
+    bodies once, unrolled layers are counted exactly)."""
+    aux = aux or {}
+    if cfg.inputs_embeds:
+        x = embeds.astype(_dtype(cfg))
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    x = shard(x, ("batch", "seq", "embed"))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    spec_tree = param_shapes(cfg) if scan_param_fsdp else None
+    for key, off, cnt, block in execution_runs(cfg):
+        blk = BLOCKS[block]
+        sp = _slice_stage(params["stages"][key], off, cnt)
+        sspec = spec_tree["stages"][key] if spec_tree else None
+
+        def step(x, p_layer, _blk=blk, _ss=sspec):
+            if _ss is not None:
+                from repro.launch.sharding import param_constraint
+                p_layer = jax.tree.map(
+                    lambda a, sp_: param_constraint(a, sp_.axes[1:]),
+                    p_layer, _ss)
+            y, a = _blk.forward(x, p_layer, cfg, aux)
+            y = shard(y, ("batch", "seq", "embed"))
+            return y, jnp.asarray(a, jnp.float32)
+
+        if unroll:
+            step = _remat_wrap(step, remat)
+            for j in range(cnt):
+                pl = jax.tree.map(lambda a: a[j], sp)
+                x, a = step(x, pl)
+                aux_total = aux_total + a
+        elif remat == "nested" and cnt >= 4:
+            # two-level sqrt(L) checkpointing: outer groups + per-layer,
+            # peak residency ~ (G + cnt/G) block inputs instead of cnt
+            G = 1
+            for g in range(int(cnt ** 0.5), 0, -1):
+                if cnt % g == 0:
+                    G = g
+                    break
+            inner = cnt // G
+            sp2 = jax.tree.map(
+                lambda a: a.reshape((G, inner) + a.shape[1:]), sp)
+            layer_step = jax.checkpoint(step)
+
+            def group_fn(x, gp):
+                x, auxs = jax.lax.scan(lambda c, q: layer_step(c, q), x, gp)
+                return x, jnp.sum(auxs)
+
+            x, auxg = jax.lax.scan(
+                lambda c, q: jax.checkpoint(group_fn)(c, q), x, sp2)
+            aux_total = aux_total + jnp.sum(auxg)
+        else:
+            step = _remat_wrap(step, remat)
+            x, auxs = jax.lax.scan(lambda c, p: step(c, p), x, sp)
+            aux_total = aux_total + jnp.sum(auxs)
+
+    if last_only:
+        x = x[:, -1:, :]
+    x = apply_norm(x, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    logits = shard(logits, ("batch", "seq", "vocab"))
+    return logits, aux_total
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: str | None = "full",
+            unroll: bool = False, scan_param_fsdp: bool = False):
+    logits, aux = forward(params, cfg,
+                          tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"),
+                          aux={k: v for k, v in batch.items()
+                               if k in ("image_embed",)},
+                          remat=remat, unroll=unroll,
+                          scan_param_fsdp=scan_param_fsdp)
+    nll = cross_entropy(logits, batch["labels"], cfg.logit_softcap)
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+# ------------------------------------------------------------------- decode
+
+def init_caches(cfg: ModelConfig, B: int, T: int):
+    """Stacked per-stage caches for one-token decode with context length T."""
+    dt = _dtype(cfg)
+    caches = {}
+    for si, st in enumerate(cfg.prologue):
+        key = _stage_key("pro", si, st.block)
+        one = BLOCKS[st.block].init_cache(cfg, B, T, dt)
+        caches[key] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (st.layers,) + a.shape).copy()
+            if hasattr(a, "shape") else a, one)
+    for si, st in enumerate(cfg.pattern):
+        key = _stage_key("s", si, st.block)
+        L = st.layers * cfg.n_units
+        one = BLOCKS[st.block].init_cache(cfg, B, T, dt)
+        caches[key] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), one)
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens=None, embeds=None,
+                aux=None, unroll: bool = False):
+    """One-token decode.  tokens (B,1) int32 / embeds (B,1,D).
+    Returns (logits (B,1,V), new_caches)."""
+    aux = aux or {}
+    if cfg.inputs_embeds:
+        x = embeds.astype(_dtype(cfg))
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    new_caches = {k: None for k in caches}
+
+    for key, off, cnt, block in execution_runs(cfg):
+        blk = BLOCKS[block]
+        sp = _slice_stage(params["stages"][key], off, cnt)
+        sc = _slice_stage(caches[key], off, cnt)
+
+        def step(x, pc, _blk=blk):
+            p_layer, c_layer = pc
+            y, c_new = _blk.decode(x, p_layer, cfg, c_layer, aux)
+            return y, c_new
+
+        if unroll:
+            couts = []
+            for j in range(cnt):
+                pl = jax.tree.map(lambda a: a[j], sp)
+                cl = jax.tree.map(lambda a: a[j], sc)
+                x, c_new = step(x, (pl, cl))
+                couts.append(c_new)
+            c_out = jax.tree.map(lambda *xs: jnp.stack(xs), *couts)
+        else:
+            x, c_out = jax.lax.scan(step, x, (sp, sc))
+        if new_caches[key] is None:
+            new_caches[key] = c_out
+        else:
+            new_caches[key] = jax.tree.map(
+                lambda full, part: jnp.concatenate([full, part], axis=0),
+                new_caches[key], c_out)
+
+    x = apply_norm(x, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_caches

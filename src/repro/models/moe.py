@@ -1,0 +1,104 @@
+"""Mixture-of-experts FFN: top-k routing, capacity-bucketed dispatch, batched
+expert GEMMs, optional shared experts (DeepSeekMoE), load-balance aux loss.
+
+Dispatch is scatter-based (linear in tokens), not the quadratic GShard
+dispatch-einsum: tokens are ranked within their expert via a one-hot cumsum,
+scattered into an (E, C, D) buffer (overflow dropped at capacity C =
+ceil(T*K/E)*capacity_factor), processed by one batched einsum per weight —
+the MXU-friendly TPU formulation (MegaBlocks block-sparse is a GPU-ism;
+DESIGN.md §2) — and combined back with their gates.
+
+Sharding: experts live on the "experts" logical axis (the model mesh axis);
+with batch-sharded activations GSPMD turns dispatch/combine into all-to-all —
+the collective the MoE roofline cells track.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Spec, glu_mlp, mlp_shapes, shard
+
+__all__ = ["moe_shapes", "moe_ffn"]
+
+
+def moe_shapes(cfg, dtype):
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    p = {
+        "router": Spec((D, E), jnp.float32, ("embed", "experts")),
+        "w1": Spec((E, D, Fe), dtype, ("experts", "embed", "mlp")),
+        "w3": Spec((E, D, Fe), dtype, ("experts", "embed", "mlp")),
+        "w2": Spec((E, Fe, D), dtype, ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_shapes(cfg, cfg.moe_d_ff * cfg.n_shared_experts,
+                                 dtype)
+    return p
+
+
+GROUP_TOKENS = 1024   # dispatch-group size (bounds per-group capacity)
+
+
+def moe_ffn(x, p, cfg, act: str, capacity_factor: float = 1.25):
+    """x (B,S,D) -> ((B,S,D), aux_loss f32).
+
+    Tokens are split into GROUP_TOKENS-sized groups along the (sharded)
+    batch dim; dispatch is a vmapped per-group scatter into an
+    (E, C_group, D) buffer — batch-parallel for GSPMD, so the only cross-
+    device movement is the batch->expert resharding before the expert
+    einsums (the EP all-to-all)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    tg = min(GROUP_TOKENS, T)
+    G = T // tg
+    xg = x.reshape(G, tg, D)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])           # (G,t,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                  # (G,t,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    one_hot_k = jax.nn.one_hot(idx, E, dtype=jnp.float32)     # (G,t,K,E)
+    frac_tokens = jnp.mean(jnp.sum(one_hot_k, axis=2), axis=(0, 1)) / K
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs) * cfg.router_aux_coef
+
+    # rank within (group, expert) over the t*K assignment slots
+    flat_e = idx.reshape(G, tg * K)                           # (G,tK)
+    flat_g = gate_vals.reshape(G, tg * K)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)           # (G,tK,E)
+    pos = jnp.cumsum(oh, axis=1) - oh
+    pos_in_e = jnp.sum(pos * oh, axis=-1)                     # (G,tK)
+    C = int(max(K, -(-tg * K // E) * capacity_factor))
+    C = -(-C // 8) * 8                                        # lane-align
+    keep = pos_in_e < C
+    dest = jnp.where(keep, flat_e * C + pos_in_e, E * C)      # overflow sink
+
+    tok = jnp.arange(tg * K, dtype=jnp.int32) // K
+
+    def scatter_group(xb, destb):
+        buf = jnp.zeros((E * C + 1, D), x.dtype)
+        return buf.at[destb].add(xb[tok])
+
+    buf = jax.vmap(scatter_group)(xg, dest)                   # (G,E*C+1,D)
+    eb = buf[:, : E * C].reshape(G, E, C, D)
+    eb = shard(eb, ("batch", "experts", None, "embed"))
+
+    h1 = jnp.einsum("gecd,edf->gecf", eb, p["w1"])
+    h3 = jnp.einsum("gecd,edf->gecf", eb, p["w3"])
+    hact = (jax.nn.silu(h1) if act == "silu" else jax.nn.gelu(h1)) * h3
+    hact = shard(hact, ("batch", "experts", None, "mlp"))
+    out = jnp.einsum("gecf,efd->gecd", hact, p["w2"])         # (G,E,C,D)
+
+    # combine: per-group gather of each kept assignment's output row
+    out_flat = jnp.concatenate([out.reshape(G, E * C, D),
+                                jnp.zeros((G, 1, D), out.dtype)], axis=1)
+    rows = jnp.take_along_axis(out_flat, dest[..., None], axis=1)  # (G,tK,D)
+    w = (flat_g * keep).astype(out.dtype)[..., None]
+    y = jnp.sum((rows * w).reshape(G, tg, K, D), axis=2).reshape(B, S, D)
+    if cfg.n_shared_experts:
+        y = y + glu_mlp(x, p["shared"], act)
+    return y, aux

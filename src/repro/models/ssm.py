@@ -1,0 +1,378 @@
+"""State-space + recurrent layers: Mamba (selective SSM, for Hymba's hybrid
+heads), and xLSTM's mLSTM / sLSTM cells.
+
+TPU adaptation: the selective scan uses jax.lax.associative_scan (log-depth,
+vectorized) rather than a sequential loop — the TPU-native formulation of
+Mamba's recurrence.  mLSTM trains in its parallel (attention-like) form and
+decodes with the O(1) matrix-memory recurrence; sLSTM is inherently
+sequential (lax.scan over time).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Spec, shard
+
+__all__ = ["mamba_shapes", "mamba", "mamba_decode",
+           "mlstm_shapes", "mlstm", "mlstm_decode",
+           "slstm_shapes", "slstm", "slstm_decode"]
+
+
+# ---------------------------------------------------------------------- mamba
+
+def _dt_rank(cfg):
+    return cfg.dt_rank or max(1, cfg.d_model // 16)
+
+
+def mamba_shapes(cfg, dtype):
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    R = _dt_rank(cfg)
+    K = cfg.ssm_conv
+    return {
+        "in_proj": Spec((D, 2 * Di), dtype, ("embed", "mlp")),
+        "conv_w": Spec((K, Di), dtype, ("conv", "mlp")),
+        "conv_b": Spec((Di,), dtype, ("mlp",)),
+        "x_proj": Spec((Di, R + 2 * N), dtype, ("mlp", "lora")),
+        "dt_proj": Spec((R, Di), dtype, ("lora", "mlp")),
+        "dt_bias": Spec((Di,), jnp.float32, ("mlp",)),
+        "A_log": Spec((Di, N), jnp.float32, ("mlp", "state")),
+        "Dskip": Spec((Di,), jnp.float32, ("mlp",)),
+        "out_proj": Spec((Di, D), dtype, ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,Di); w (K,Di)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssm_scan(dA, dBx):
+    """Associative scan of h_t = dA_t * h_{t-1} + dBx_t along axis 1.
+    dA, dBx: (B, S, Di, N) f32."""
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    return h
+
+
+MAMBA_CHUNK = 512   # seq chunk bounding the (B,chunk,Di,N) working set
+UNROLL_CHUNKS = False   # metering builds (see attention.UNROLL_CHUNKS)
+
+
+def mamba(x, p, cfg):
+    """x (B,S,D) -> (B,S,D).  Long sequences run chunked: the (S,Di,N)
+    transition tensor is only ever materialized one chunk at a time, with the
+    hidden state carried across chunks (TPU-native analogue of the fused
+    selective-scan kernel)."""
+    B, S, D = x.shape
+    N = cfg.ssm_state
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+    xi = shard(xi, ("batch", "seq", "mlp"))
+    R = _dt_rank(cfg)
+    proj = xi @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :R] @ p["dt_proj"] + p["dt_bias"])  # (B,S,Di)
+    Bm = proj[..., R: R + N].astype(jnp.float32)                       # (B,S,N)
+    Cm = proj[..., R + N:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                           # (Di,N)
+    dtf = dt.astype(jnp.float32)
+    xif = xi.astype(jnp.float32)
+
+    if S <= MAMBA_CHUNK:
+        dA = jnp.exp(dtf[..., None] * A)                  # (B,S,Di,N)
+        dBx = (dtf * xif)[..., None] * Bm[:, :, None, :]
+        h = _ssm_scan(dA, dBx)                            # (B,S,Di,N)
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cm)
+    else:
+        ck = MAMBA_CHUNK
+        assert S % ck == 0, (S, ck)
+        nch = S // ck
+        Di = dtf.shape[-1]
+
+        def chop(a):  # (B,S,...) -> (nch,B,ck,...)
+            return a.reshape((B, nch, ck) + a.shape[2:]).swapaxes(0, 1)
+
+        def body(h_prev, xs):
+            dtc, xic, Bc, Cc = xs
+            dA = jnp.exp(dtc[..., None] * A)              # (B,ck,Di,N)
+            dBx = (dtc * xic)[..., None] * Bc[:, :, None, :]
+            h_loc = _ssm_scan(dA, dBx)
+            # inject carried state: h_t += (prod_{j<=t} dA_j) h_prev
+            P = jnp.exp(jnp.cumsum(dtc[..., None] * A, axis=1))
+            h = h_loc + P * h_prev[:, None]
+            yc = jnp.einsum("bsdn,bsn->bsd", h, Cc)
+            return h[:, -1], yc
+
+        h0 = jnp.zeros((B, Di, N), jnp.float32)
+        xs = (chop(dtf), chop(xif), chop(Bm), chop(Cm))
+        if UNROLL_CHUNKS:
+            h, ys_l = h0, []
+            for ci in range(nch):
+                h, yc = body(h, jax.tree.map(lambda a: a[ci], xs))
+                ys_l.append(yc)
+            ys = jnp.stack(ys_l)
+        else:
+            _, ys = jax.lax.scan(jax.checkpoint(body), h0, xs)
+        y = ys.swapaxes(0, 1).reshape(B, S, Di)
+    y = y + p["Dskip"] * xif
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(x, p, cfg, cache):
+    """One step. cache: h (B,Di,N) f32, conv (B,K-1,Di)."""
+    B = x.shape[0]
+    N = cfg.ssm_state
+    xz = x @ p["in_proj"]                   # (B,1,2Di)
+    xi, z = jnp.split(xz[:, 0], 2, axis=-1)  # (B,Di)
+    K = p["conv_w"].shape[0]
+    hist = jnp.concatenate([cache["conv"], xi[:, None, :]], axis=1)  # (B,K,Di)
+    xi = jax.nn.silu(jnp.einsum("bkd,kd->bd", hist, p["conv_w"]) + p["conv_b"])
+    R = _dt_rank(cfg)
+    proj = xi @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :R] @ p["dt_proj"] + p["dt_bias"])
+    Bm = proj[..., R: R + N].astype(jnp.float32)
+    Cm = proj[..., R + N:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)       # (B,Di,N)
+    h = dA * cache["h"] + (dt * xi.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + p["Dskip"] * xi.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))[:, None, :]
+    out = y @ p["out_proj"]
+    return out, {"h": h, "conv": hist[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------- mLSTM
+
+def mlstm_shapes(cfg, dtype):
+    D = cfg.d_model
+    Di = cfg.mlstm_pf * D
+    H = cfg.n_heads
+    return {
+        "up": Spec((D, 2 * Di), dtype, ("embed", "mlp")),
+        "wq": Spec((Di, Di), dtype, ("mlp", "heads")),
+        "wk": Spec((Di, Di), dtype, ("mlp", "heads")),
+        "wv": Spec((Di, Di), dtype, ("mlp", "heads")),
+        "wi": Spec((Di, H), dtype, ("mlp", "heads")),
+        "wf": Spec((Di, H), dtype, ("mlp", "heads")),
+        "out_norm": Spec((Di,), jnp.float32, ("mlp",)),
+        "down": Spec((Di, D), dtype, ("mlp", "embed")),
+    }
+
+
+def _mlstm_parallel(q, k, v, logi, logf):
+    """Stabilized parallel mLSTM.  q,k,v (B,H,S,hd); logi/logf (B,H,S) f32."""
+    B, H, S, hd = q.shape
+    F = jnp.cumsum(logf, axis=-1)                       # (B,H,S)
+    # D[t,s] = F_t - F_s + i_s  for s<=t
+    Dmat = F[..., :, None] - F[..., None, :] + logi[..., None, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    Dmat = jnp.where(tri, Dmat, -jnp.inf)
+    m = jnp.max(Dmat, axis=-1, keepdims=True)           # (B,H,S,1)
+    w = jnp.exp(Dmat - m)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) / jnp.sqrt(hd)
+    Cw = scores * w
+    n = jnp.maximum(jnp.abs(jnp.sum(Cw, axis=-1, keepdims=True)),
+                    jnp.exp(-m))
+    hout = jnp.einsum("bhst,bhtd->bhsd", (Cw / n).astype(v.dtype), v)
+    return hout
+
+
+MLSTM_CHUNK = 256   # chunkwise form above this sequence length
+
+
+def _mlstm_chunkwise(q, k, v, logi, logf, ck: int):
+    """Chunkwise-recurrent mLSTM: within-chunk parallel (ck x ck), matrix
+    state (C, n, m) carried across chunks — O(S*ck) memory, matches the
+    parallel form and the O(1) decode recurrence exactly.
+    q,k,v (B,H,S,hd); logi/logf (B,H,S) f32."""
+    B, H, S, hd = q.shape
+    assert S % ck == 0, (S, ck)
+    nch = S // ck
+    scale = 1.0 / jnp.sqrt(hd)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) * scale
+    vf = v.astype(jnp.float32)
+
+    def chop(a):  # (B,H,S,...) -> (nch,B,H,ck,...)
+        return a.reshape((B, H, nch, ck) + a.shape[3:]).transpose(
+            (2, 0, 1, 3) + tuple(range(4, a.ndim + 1)))
+
+    tri = jnp.tril(jnp.ones((ck, ck), bool))
+
+    def body(carry, xs):
+        C_p, n_p, m_p = carry
+        qc, kc, vc, ic, fc = xs                       # (B,H,ck,*)
+        b = jnp.cumsum(fc, axis=-1)                   # (B,H,ck)
+        g = b[..., -1:]                               # total chunk forget
+        # intra weights D[t,s] = b_t - b_s + i_s (s<=t)
+        Dm = b[..., :, None] - b[..., None, :] + ic[..., None, :]
+        Dm = jnp.where(tri, Dm, -jnp.inf)
+        m_intra = jnp.max(Dm, axis=-1)                # (B,H,ck)
+        m_inter = b + m_p[..., None]
+        m_t = jnp.maximum(m_intra, m_inter)
+        w = jnp.exp(Dm - m_t[..., None])
+        s_qk = jnp.einsum("bhtd,bhsd->bhts", qc, kc)
+        num = jnp.einsum("bhts,bhsd->bhtd", s_qk * w, vc)
+        den = jnp.sum(s_qk * w, axis=-1)
+        inter_w = jnp.exp(b + m_p[..., None] - m_t)   # (B,H,ck)
+        num = num + inter_w[..., None] * jnp.einsum("bhtd,bhdv->bhtv", qc, C_p)
+        den = den + inter_w * jnp.einsum("bhtd,bhd->bht", qc, n_p)
+        hloc = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update
+        m_n = jnp.maximum((g + m_p[..., None])[..., 0],
+                          jnp.max(g - b + ic, axis=-1))
+        sw = jnp.exp(g - b + ic - m_n[..., None])     # (B,H,ck)
+        C_n = jnp.exp(g[..., 0] + m_p - m_n)[..., None, None] * C_p + \
+            jnp.einsum("bhs,bhsd,bhsv->bhdv", sw, kc, vc)
+        n_n = jnp.exp(g[..., 0] + m_p - m_n)[..., None] * n_p + \
+            jnp.einsum("bhs,bhsd->bhd", sw, kc)
+        return (C_n, n_n, m_n), hloc
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    xs = (chop(qf), chop(kf), chop(vf), chop(logi), chop(logf))
+    if UNROLL_CHUNKS:
+        carry, hs_l = (C0, n0, m0), []
+        for ci in range(nch):
+            carry, hc = body(carry, jax.tree.map(lambda a: a[ci], xs))
+            hs_l.append(hc)
+        hs = jnp.stack(hs_l)
+    else:
+        _, hs = jax.lax.scan(jax.checkpoint(body), (C0, n0, m0), xs)
+    # (nch,B,H,ck,hd) -> (B,H,S,hd)
+    return hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd).astype(v.dtype)
+
+
+def mlstm(x, p, cfg):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    Di = cfg.mlstm_pf * D
+    hd = Di // H
+    up = x @ p["up"]
+    hin, z = jnp.split(up, 2, axis=-1)                  # (B,S,Di)
+    q = (hin @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (hin @ p["wk"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = (hin @ p["wv"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    logi = (hin @ p["wi"]).transpose(0, 2, 1).astype(jnp.float32)   # (B,H,S)
+    logf = jax.nn.log_sigmoid((hin @ p["wf"]).transpose(0, 2, 1).astype(jnp.float32))
+    if S > MLSTM_CHUNK:
+        hout = _mlstm_chunkwise(q, k, v, logi, logf, MLSTM_CHUNK)
+    else:
+        hout = _mlstm_parallel(q, k, v, logi, logf)
+    hout = hout.transpose(0, 2, 1, 3).reshape(B, S, Di)
+    from .layers import rms_norm
+    hout = rms_norm(hout, p["out_norm"], cfg.norm_eps)
+    y = hout * jax.nn.silu(z)
+    return y @ p["down"]
+
+
+def mlstm_decode(x, p, cfg, cache):
+    """O(1) recurrent step.  cache: C (B,H,hd,hd) f32, n (B,H,hd) f32,
+    m (B,H) f32."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    Di = cfg.mlstm_pf * cfg.d_model
+    hd = Di // H
+    up = x[:, 0] @ p["up"]
+    hin, z = jnp.split(up, 2, axis=-1)                  # (B,Di)
+    q = (hin @ p["wq"]).reshape(B, H, hd)
+    k = (hin @ p["wk"]).reshape(B, H, hd)
+    v = (hin @ p["wv"]).reshape(B, H, hd)
+    logi = (hin @ p["wi"]).astype(jnp.float32)          # (B,H)
+    logf = jax.nn.log_sigmoid((hin @ p["wf"]).astype(jnp.float32))
+    m_new = jnp.maximum(logf + cache["m"], logi)
+    fs = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    is_ = jnp.exp(logi - m_new)[..., None]
+    kf = k.astype(jnp.float32) / jnp.sqrt(hd)
+    C = fs[..., None] * cache["C"] + is_[..., None] * \
+        (kf[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n = fs * cache["n"] + is_ * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhdv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                      jnp.exp(-m_new))[..., None]
+    hout = (num / den).reshape(B, Di)
+    from .layers import rms_norm
+    hout = rms_norm(hout, p["out_norm"], cfg.norm_eps)
+    y = (hout * jax.nn.silu(z))[:, None, :].astype(x.dtype)
+    return y @ p["down"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------- sLSTM
+
+def slstm_shapes(cfg, dtype):
+    D = cfg.d_model
+    H = cfg.slstm_heads
+    dh = D // H
+    return {
+        "W": Spec((D, 4 * D), dtype, ("embed", "mlp")),
+        "R": Spec((H, dh, 4 * dh), dtype, ("heads", "qk", "v")),
+        "bias": Spec((4 * D,), jnp.float32, ("mlp",)),
+        "out_norm": Spec((D,), jnp.float32, ("embed",)),
+        "down": Spec((D, D), dtype, ("embed", "embed")),
+    }
+
+
+def _slstm_step(p, cfg, carry, wx):
+    """carry: (c, n, h, m) each (B,H,dh) / m (B,H).  wx: (B,4D) precomputed."""
+    c, n, h, m = carry
+    B = wx.shape[0]
+    H = cfg.slstm_heads
+    dh = cfg.d_model // H
+    rec = jnp.einsum("bhd,hdk->bhk", h.astype(p["R"].dtype), p["R"])  # (B,H,4dh)
+    gates = wx.reshape(B, H, 4 * dh) + rec + p["bias"].reshape(H, 4 * dh)
+    gi, gf, gz, go = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+    # per-head scalar-ish gating (keep per-unit gates; stabilizer per unit)
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + m[..., None], gi)
+    i_ = jnp.exp(gi - m_new)
+    f_ = jnp.exp(logf + m[..., None] - m_new)
+    c_new = f_ * c + i_ * jnp.tanh(gz)
+    n_new = f_ * n + i_
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    m_out = jnp.max(m_new, axis=-1)     # collapse stabilizer per head
+    return (c_new, n_new, h_new, m_out), h_new
+
+
+def slstm(x, p, cfg):
+    """x (B,S,D): sequential scan over time (inherent to sLSTM)."""
+    B, S, D = x.shape
+    H = cfg.slstm_heads
+    dh = D // H
+    wx = x @ p["W"]                                      # (B,S,4D)
+    zeros = jnp.zeros((B, H, dh), jnp.float32)
+    carry = (zeros, zeros, zeros, jnp.zeros((B, H), jnp.float32))
+
+    def step(carry, wxt):
+        return _slstm_step(p, cfg, carry, wxt)
+
+    _, hs = jax.lax.scan(step, carry, wx.swapaxes(0, 1))  # (S,B,H,dh)
+    hs = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
+    from .layers import rms_norm
+    hs = rms_norm(hs, p["out_norm"], cfg.norm_eps)
+    return hs @ p["down"]
+
+
+def slstm_decode(x, p, cfg, cache):
+    B = x.shape[0]
+    wx = (x[:, 0] @ p["W"])
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    carry, h = _slstm_step(p, cfg, carry, wx)
+    c, n, hh, m = carry
+    D = cfg.d_model
+    from .layers import rms_norm
+    hs = rms_norm(h.reshape(B, D).astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    out = (hs @ p["down"])[:, None, :]
+    return out, {"c": c, "n": n, "h": hh, "m": m}

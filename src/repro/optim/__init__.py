@@ -1,0 +1,9 @@
+"""Distributed optimizer substrate."""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update, adamw_state_shapes, global_norm
+from .schedule import lr_schedule
+from .grad_compress import quantize_int8, dequantize_int8, compressed_psum
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "adamw_state_shapes",
+           "global_norm", "lr_schedule", "quantize_int8", "dequantize_int8",
+           "compressed_psum"]

@@ -1,0 +1,98 @@
+"""AdamW with f32 master weights, ZeRO-style sharded states, global-norm
+clipping.  States inherit each parameter's sharding (FSDP over the data axis
+x TP over model), so optimizer memory scales 1/(data*model) — the ZeRO-3
+posture under GSPMD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_f32: bool = True     # keep f32 master copy of bf16 params
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+    if cfg.master_f32:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_state_shapes(param_specs, cfg: AdamWConfig):
+    """Spec tree mirroring adamw_init (for the dry-run's in_shardings)."""
+    from repro.models.layers import Spec
+
+    def f32(s):
+        return Spec(s.shape, jnp.float32, getattr(s, "axes", (None,) * len(s.shape)))
+
+    state = {
+        "step": Spec((), jnp.int32, ()),
+        "m": jax.tree.map(f32, param_specs),
+        "v": jax.tree.map(f32, param_specs),
+    }
+    if cfg.master_f32:
+        state["master"] = jax.tree.map(f32, param_specs)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = cfg.lr * lr_scale
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    masters = state.get("master", params)
+
+    def upd(p_master, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        pm = p_master.astype(jnp.float32)
+        pm = pm - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                        + cfg.weight_decay * pm)
+        return pm, m, v
+
+    out = jax.tree.map(upd, masters, grads, state["m"], state["v"])
+    new_master = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda pm, p: pm.astype(p.dtype),
+                              new_master, params)
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if "master" in state:
+        new_state["master"] = new_master
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,21 @@
+"""LR schedules (warmup + cosine / linear / constant)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["lr_schedule"]
+
+
+def lr_schedule(step, kind: str = "cosine", warmup: int = 100,
+                total: int = 10000, min_ratio: float = 0.1):
+    s = step.astype(jnp.float32)
+    w = jnp.minimum(s / max(warmup, 1), 1.0)
+    if kind == "constant":
+        return w
+    frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    if kind == "linear":
+        decay = 1.0 - (1.0 - min_ratio) * frac
+    else:  # cosine
+        decay = min_ratio + (1.0 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return w * decay

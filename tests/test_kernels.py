@@ -1,0 +1,140 @@
+"""Per-kernel interpret-mode validation against the jnp oracles,
+sweeping shapes/dtypes, plus hypothesis property tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bloom import bloom_build_np, bloom_words
+from repro.core.datasets import make_dataset
+from repro.core.plr import greedy_plr_np
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+def _padded_keys(name, n, cap, seed=0):
+    keys = make_dataset(name, n, seed=seed)
+    pad = np.full(cap, np.iinfo(np.int64).max, np.int64)
+    pad[:n] = keys
+    return keys, jnp.asarray(pad)
+
+
+@pytest.mark.parametrize("name", ["linear", "normal", "osm"])
+@pytest.mark.parametrize("n,cap,B", [(1000, 1024, 256), (5000, 8192, 512)])
+@pytest.mark.parametrize("delta", [4, 8])
+def test_plr_lookup_kernel(name, n, cap, B, delta):
+    keys, _ = _padded_keys(name, n, cap)
+    m = greedy_plr_np(keys, delta=delta, pad_to=512)
+    rng = np.random.default_rng(1)
+    probes = jnp.asarray(rng.choice(keys, B))
+    want = kref.plr_lookup_ref(m.starts, m.slopes, m.intercepts,
+                               m.n_segments, probes, jnp.int32(n))
+    got = ops.plr_lookup(m.starts, m.slopes, m.intercepts, m.n_segments,
+                         probes, n, impl="pallas_interpret", block_b=B)
+    # jit-fused FMA vs eager mul+add can differ by one ulp exactly at the
+    # .5 rounding boundary -> positions may differ by 1; the bounded-search
+    # window (delta+1 slack) absorbs this by construction.
+    assert np.abs(np.asarray(got) - np.asarray(want)).max() <= 1
+    # positions actually within delta of the true index
+    true_idx = np.searchsorted(keys, np.asarray(probes))
+    assert np.abs(np.asarray(got) - true_idx).max() <= delta + 1
+
+
+@pytest.mark.parametrize("name", ["normal", "uspr"])
+@pytest.mark.parametrize("delta", [4, 8, 16])
+def test_bounded_search_kernel(name, delta):
+    n, cap, B = 4000, 4096, 512
+    keys, padded = _padded_keys(name, n, cap)
+    rng = np.random.default_rng(2)
+    hit_probes = rng.choice(keys, B // 2)
+    miss_probes = hit_probes + 1  # mostly misses
+    probes = jnp.asarray(np.concatenate([hit_probes, miss_probes]))
+    true_idx = np.searchsorted(keys, np.asarray(probes)).astype(np.int32)
+    jitter = rng.integers(-delta, delta + 1, B).astype(np.int32)
+    pos = jnp.asarray(np.clip(true_idx + jitter, 0, n - 1))
+    want_idx, want_found = kref.bounded_search_ref(padded, pos, probes,
+                                                   jnp.int32(n), delta)
+    got_idx, got_found = ops.bounded_search(padded, pos, probes, n,
+                                            delta=delta,
+                                            impl="pallas_interpret",
+                                            block_b=256)
+    np.testing.assert_array_equal(np.asarray(got_found), np.asarray(want_found))
+    f = np.asarray(want_found)
+    np.testing.assert_array_equal(np.asarray(got_idx)[f], np.asarray(want_idx)[f])
+    # found iff the probe is a real key whose index is within the window
+    in_keys = np.isin(np.asarray(probes), keys)
+    within = np.abs(true_idx - np.asarray(pos)) <= delta + 1
+    np.testing.assert_array_equal(f, in_keys & within)
+
+
+@pytest.mark.parametrize("n_keys,k", [(100, 7), (5000, 7), (5000, 4)])
+def test_bloom_probe_kernel(n_keys, k):
+    keys = make_dataset("uspr", n_keys, seed=3)
+    W = bloom_words(n_keys)
+    bits = jnp.asarray(bloom_build_np(keys, W, k))
+    rng = np.random.default_rng(4)
+    B = 512
+    probes_np = np.concatenate([rng.choice(keys, B // 2),
+                                rng.integers(0, 1 << 52, B // 2)])
+    probes = jnp.asarray(probes_np)
+    want = kref.bloom_probe_kernel_ref(bits, probes, k, jnp.int32(W))
+    got = ops.bloom_probe(bits, probes, W, k_hashes=k,
+                          impl="pallas_interpret", block_b=256)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # no false negatives ever
+    assert np.asarray(want)[: B // 2].all()
+    # false positive rate sane for 10 bits/key
+    fp = np.asarray(want)[B // 2:][~np.isin(probes_np[B // 2:], keys)]
+    assert fp.mean() < 0.1
+
+
+@pytest.mark.parametrize("name", ["linear", "normal", "osm"])
+@pytest.mark.parametrize("block_records", [64, 256])
+def test_sstable_search_kernel(name, block_records):
+    n, cap, B = 3000, 4096, 512
+    keys, padded = _padded_keys(name, n, cap)
+    nb = -(-n // block_records)
+    NB = max(1, cap // block_records)
+    fences = np.full(NB, np.iinfo(np.int64).max, np.int64)
+    fences[:nb] = keys[::block_records][:nb]
+    fences = jnp.asarray(fences)
+    rng = np.random.default_rng(5)
+    probes_np = np.concatenate([rng.choice(keys, B // 2),
+                                rng.choice(keys, B // 2) + 1])
+    probes = jnp.asarray(probes_np)
+    want_idx, want_found = kref.sstable_search_ref(
+        fences, padded, probes, jnp.int32(nb), jnp.int32(n), block_records)
+    got_idx, got_found = ops.sstable_search(
+        fences, padded, probes, nb, n, block_records=block_records,
+        impl="pallas_interpret", block_b=256)
+    np.testing.assert_array_equal(np.asarray(got_found), np.asarray(want_found))
+    f = np.asarray(want_found)
+    np.testing.assert_array_equal(np.asarray(got_idx)[f], np.asarray(want_idx)[f])
+    # oracle sanity: found exactly for real keys
+    np.testing.assert_array_equal(f, np.isin(probes_np, keys))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(100, 2000), st.sampled_from([2, 8, 24]),
+       st.integers(0, 2**31))
+def test_property_model_path_end_to_end(n, delta, seed):
+    """PLR predict + bounded search finds every present key (pipeline
+    invariant: model error bound => window always contains the key)."""
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(0, 1 << 50, n * 2, dtype=np.int64))[:n]
+    if keys.shape[0] < n:
+        return
+    cap = 1 << int(np.ceil(np.log2(n)))
+    padded = np.full(cap, np.iinfo(np.int64).max, np.int64)
+    padded[:n] = keys
+    m = greedy_plr_np(keys, delta=delta)
+    B = 256
+    probes = jnp.asarray(rng.choice(keys, B))
+    pos = kref.plr_lookup_ref(m.starts, m.slopes, m.intercepts, m.n_segments,
+                              probes, jnp.int32(n))
+    idx, found = kref.bounded_search_ref(jnp.asarray(padded), pos, probes,
+                                         jnp.int32(n), delta)
+    assert np.asarray(found).all()
+    np.testing.assert_array_equal(np.asarray(padded)[np.asarray(idx)],
+                                  np.asarray(probes))

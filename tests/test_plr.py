@@ -1,0 +1,71 @@
+"""Greedy-PLR: error-bound guarantee, numpy/jax agreement, edge cases."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import greedy_plr_np, greedy_plr_jax, plr_predict_np
+from repro.core.datasets import make_dataset
+
+
+@pytest.mark.parametrize("name", ["linear", "seg10%", "normal", "osm", "uspr"])
+@pytest.mark.parametrize("delta", [2, 8, 32])
+def test_error_bound_guarantee(name, delta):
+    keys = make_dataset(name, 4096, seed=3)
+    m = greedy_plr_np(keys, delta=delta)
+    pred = plr_predict_np(m, keys)
+    err = np.abs(pred - np.arange(keys.shape[0]))
+    assert err.max() <= delta + 1e-6, f"max err {err.max()} > delta {delta}"
+
+
+def test_linear_dataset_single_segment():
+    keys = np.arange(1000, dtype=np.int64)
+    m = greedy_plr_np(keys, delta=8)
+    assert int(m.n_segments) == 1
+
+
+def test_more_segments_for_rougher_data():
+    lin = greedy_plr_np(make_dataset("linear", 8192), delta=8)
+    seg = greedy_plr_np(make_dataset("seg10%", 8192), delta=8)
+    nrm = greedy_plr_np(make_dataset("normal", 8192), delta=8)
+    assert int(lin.n_segments) <= int(seg.n_segments)
+    assert int(lin.n_segments) <= int(nrm.n_segments)
+
+
+def test_larger_delta_fewer_segments():
+    keys = make_dataset("normal", 8192, seed=7)
+    counts = [int(greedy_plr_np(keys, delta=d).n_segments) for d in (2, 8, 32, 128)]
+    assert counts == sorted(counts, reverse=True)
+
+
+def test_jax_matches_numpy():
+    keys = make_dataset("normal", 2048, seed=5)
+    m_np = greedy_plr_np(keys, delta=8, pad_to=1024)
+    m_jx = greedy_plr_jax(np.asarray(keys), delta=8, cap=1024)
+    assert int(m_np.n_segments) == int(m_jx.n_segments)
+    n = int(m_np.n_segments)
+    np.testing.assert_allclose(np.asarray(m_jx.starts)[:n],
+                               np.asarray(m_np.starts)[:n])
+    np.testing.assert_allclose(np.asarray(m_jx.slopes)[:n],
+                               np.asarray(m_np.slopes)[:n], rtol=1e-12)
+    # jax version satisfies the bound too
+    pred = plr_predict_np(m_jx, keys)
+    assert np.abs(pred - np.arange(keys.shape[0])).max() <= 8 + 1e-6
+
+
+def test_tiny_inputs():
+    for n in (1, 2, 3):
+        keys = np.arange(n, dtype=np.int64) * 7
+        m = greedy_plr_np(keys, delta=8)
+        pred = plr_predict_np(m, keys)
+        assert np.abs(pred - np.arange(n)).max() <= 8
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 2**50), min_size=2, max_size=300, unique=True),
+       st.sampled_from([1, 4, 8, 16]))
+def test_property_error_bound(raw, delta):
+    keys = np.sort(np.asarray(raw, np.int64))
+    m = greedy_plr_np(keys, delta=delta)
+    pred = plr_predict_np(m, keys)
+    assert np.abs(pred - np.arange(keys.shape[0])).max() <= delta + 1e-6

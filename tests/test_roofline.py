@@ -1,0 +1,93 @@
+"""HLO collective parser (trip-count awareness) + roofline arithmetic."""
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_parse import (collective_breakdown, collective_bytes,
+                                    parse_hlo_computations, _shape_bytes,
+                                    _trip_count)
+from repro.launch.roofline import analyze_cell, model_flops
+
+FAKE_HLO = """\
+HloModule test
+
+%body.1 (p: (s32[], bf16[128,256])) -> (s32[], bf16[128,256]) {
+  %ar = bf16[128,256] all-reduce(bf16[128,256] %x), to_apply=%add.0
+  ROOT %t = tuple(...)
+}
+
+%cond.1 (p: (s32[], bf16[128,256])) -> pred[] {
+  %iv = s32[] get-tuple-element(...)
+  %c = s32[] constant(24)
+  ROOT %cmp = pred[] compare(s32[] %iv, s32[] %c), direction=LT
+}
+
+%inner (x: f32[64]) -> f32[64] {
+  %ag = f32[512] all-gather(f32[64] %x), dimensions={0}
+  ROOT %r = f32[64] reduce-scatter(f32[512] %ag), dimensions={0}
+}
+
+ENTRY %main (a: bf16[128,256]) -> bf16[128,256] {
+  %w = (s32[], bf16[128,256]) while((s32[], bf16[128,256]) %init), \
+condition=%cond.1, body=%body.1
+  %call1 = f32[64] fusion(f32[64] %z), kind=kLoop, calls=%inner
+  %a2a = bf16[32,32] all-to-all(bf16[32,32] %y), dimensions={0}
+  ROOT %out = bf16[128,256] get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,256]") == 128 * 256 * 2
+    assert _shape_bytes("(f32[2,3], s32[4])") == 24 + 16
+    assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") >= 0
+
+
+def test_trip_count_extraction():
+    comps = parse_hlo_computations(FAKE_HLO)
+    assert "cond.1" in comps
+    assert _trip_count(comps["cond.1"]) == 24
+
+
+def test_collective_breakdown_with_while_multiplier():
+    bd = collective_breakdown(FAKE_HLO)
+    # all-reduce inside the while body: 128*256*2 bytes * 24 trips
+    assert bd["all-reduce"] == 128 * 256 * 2 * 24
+    # nested fusion call: all-gather f32[512] + reduce-scatter f32[64]
+    assert bd["all-gather"] == 512 * 4
+    assert bd["reduce-scatter"] == 64 * 4
+    # entry-level all-to-all
+    assert bd["all-to-all"] == 32 * 32 * 2
+    assert collective_bytes(FAKE_HLO) == sum(bd.values())
+
+
+def test_analyze_cell_terms():
+    full = {
+        "arch": "qwen2-0.5b", "shape": "train_4k", "mesh": "16x16",
+        "n_devices": 256,
+        "cost": {"flops": 1e12, "bytes accessed": 1e11},
+        "collectives": {"all-gather": 5e9},
+        "memory": {"peak_bytes": 8 << 30},
+        "compile_s": 1.0,
+    }
+    u1 = {"cost": {"flops": 4e11, "bytes accessed": 5e10}}
+    u2 = {"cost": {"flops": 5e11, "bytes accessed": 6e10}}
+    c = analyze_cell(full, u1, u2)
+    # qwen2-0.5b has 24 units: total = u2 + 22 * (u2 - u1)
+    assert np.isclose(c["flops_per_dev"], 5e11 + 22 * 1e11)
+    assert np.isclose(c["bytes_per_dev"], 6e10 + 22 * 1e10)
+    assert np.isclose(c["t_collective_s"], 5e9 / 50e9)
+    assert c["dominant"] in ("compute", "memory", "collective")
+    assert c["fits_hbm"]
+
+
+def test_model_flops_conventions():
+    t = model_flops("qwen2-0.5b", "train_4k")
+    p = model_flops("qwen2-0.5b", "prefill_32k")
+    d = model_flops("qwen2-0.5b", "decode_32k")
+    assert t / p == pytest.approx(3.0, rel=0.01)   # 6ND vs 2ND, same tokens
+    assert d < p / 1000                            # one token per seq
+    # MoE active < total
+    from repro.configs import get_config
+    cfg = get_config("mixtral-8x22b")
+    assert cfg.active_param_count() < 0.5 * cfg.param_count()

@@ -1,0 +1,136 @@
+"""End-to-end store behaviour: correctness of get/put across compactions,
+learning modes, CBA accounting, level learning."""
+
+import numpy as np
+import pytest
+
+from repro.core import BourbonStore, StoreConfig, LSMConfig, make_dataset
+from repro.core.engine import EngineConfig
+
+
+def small_cfg(**kw):
+    lsm = LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                    l1_cap_records=1 << 13)
+    return StoreConfig(lsm=lsm, engine=EngineConfig(seg_cap=2048), **kw)
+
+
+@pytest.fixture(scope="module")
+def loaded():
+    keys = make_dataset("osm", 1 << 15, seed=11)
+    return keys
+
+
+@pytest.mark.parametrize("mode,policy,gran", [
+    ("wisckey", "never", "file"),
+    ("bourbon", "always", "file"),
+    ("bourbon", "cba", "file"),
+    ("bourbon", "always", "level"),
+])
+def test_get_returns_inserted(loaded, mode, policy, gran):
+    keys = loaded
+    st = BourbonStore(small_cfg(mode=mode, policy=policy, granularity=gran))
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(keys)
+    for off in range(0, keys.shape[0], 4096):
+        st.put_batch(perm[off:off + 4096])
+    st.flush_all()
+    if mode == "bourbon":
+        st.learn_all()
+    probes = rng.choice(keys, size=4096, replace=False)
+    found, _ = st.get_batch(probes)
+    assert found.all()
+    # negative probes miss
+    neg = probes + 1
+    mask = ~np.isin(neg, keys)
+    found_n, _ = st.get_batch(neg)
+    assert not found_n[mask].any()
+
+
+def test_updates_win(loaded):
+    st = BourbonStore(small_cfg(mode="bourbon", policy="always"))
+    keys = loaded[:8192]
+    v1 = np.zeros((keys.shape[0], 64), np.uint8); v1[:, 0] = 1
+    v2 = np.zeros((keys.shape[0], 64), np.uint8); v2[:, 0] = 2
+    st.cfg.fetch_values = True
+    st.cfg.engine.fetch_values = True
+    st.put_batch(keys, v1)
+    st.put_batch(keys, v2)   # overwrite
+    st.flush_all()
+    found, vals = st.get_batch(keys[:1024])
+    assert found.all()
+    assert (vals[:, 0] == 2).all()
+
+
+def test_deletes(loaded):
+    st = BourbonStore(small_cfg())
+    keys = loaded[:4096]
+    st.put_batch(keys)
+    st.delete_batch(keys[:100])
+    st.flush_all()
+    found, _ = st.get_batch(keys[:200])
+    assert not found[:100].any()
+    assert found[100:].all()
+
+
+def test_compaction_pushes_down(loaded):
+    st = BourbonStore(small_cfg())
+    rng = np.random.default_rng(1)
+    st.put_batch(rng.permutation(loaded))
+    st.flush_all()
+    depth = [len(l) for l in st.tree.levels]
+    assert sum(depth[1:]) > 0, "data should reach lower levels"
+    assert st.tree.total_records() == loaded.shape[0]
+    # disjointness invariant at levels >= 1
+    for li in range(1, 7):
+        tabs = sorted(st.tree.levels[li], key=lambda t: t.min_key)
+        for a, b in zip(tabs, tabs[1:]):
+            assert a.max_key < b.min_key
+
+
+def test_cba_skips_learning_under_writes(loaded):
+    """With heavy writes + no reads, benefit ~ 0 => CBA must skip files once
+    bootstrapped (guideline 4)."""
+    keys = loaded
+    st_always = BourbonStore(small_cfg(mode="bourbon", policy="always"))
+    st_cba = BourbonStore(small_cfg(mode="bourbon", policy="cba"))
+    rng = np.random.default_rng(3)
+    for s in (st_always, st_cba):
+        s.put_batch(rng.permutation(keys[: 1 << 14]))
+        s.flush_all()
+    # write-heavy phase: no lookups at all
+    for s in (st_always, st_cba):
+        for _ in range(12):
+            s.put_batch(rng.choice(keys, 4096))
+        s.drain_learning()
+    assert st_cba.executor.learn_time_us <= st_always.executor.learn_time_us
+    assert st_cba.cba.decisions["skipped"] > 0
+
+
+def test_level_learning_invalidated_by_writes(loaded):
+    st = BourbonStore(small_cfg(mode="bourbon", policy="always",
+                                granularity="level"))
+    rng = np.random.default_rng(4)
+    st.put_batch(rng.permutation(loaded[: 1 << 14]))
+    st.flush_all()
+    st.learn_all()
+    assert any(m is not None for m in st.level_models)
+    ver_before = list(st.tree.level_version)
+    for _ in range(8):
+        st.put_batch(rng.choice(loaded, 4096))
+    assert st.tree.level_version != ver_before
+    # changed levels must have dropped their models
+    for i in range(1, 7):
+        if st.tree.level_version[i] != ver_before[i]:
+            assert st.level_models[i] is None or st.executor.level_attempts > 0
+
+
+def test_model_path_fraction_reported(loaded):
+    st = BourbonStore(small_cfg(mode="bourbon", policy="always"))
+    rng = np.random.default_rng(5)
+    st.put_batch(rng.permutation(loaded))
+    st.flush_all()
+    st.learn_all()
+    st.get_batch(rng.choice(loaded, 4096))
+    s = st.stats()
+    assert s["model_path_frac"] > 0.99
+    assert s["space_overhead"] < 0.05   # paper: 0-2%
