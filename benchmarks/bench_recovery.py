@@ -1,0 +1,82 @@
+"""Durable-storage benchmark: reopen time with persisted PLR models vs
+relearn-from-scratch, and lookup latency before/after value-log GC.
+
+The first comparison is the storage-format argument (LearnedKV / Bourbon
+§4.2): serializing the learned segments inside the sstables makes a
+reopened store model-path-ready immediately, while a metadata-only format
+pays a full relearn.  The GC rows quantify WiscKey-style space
+reclamation and confirm the read path is unharmed by relocation.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import N_KEYS, emit, time_lookups
+from repro.core import BourbonStore, LSMConfig, StoreConfig, make_dataset
+from repro.core.engine import EngineConfig
+
+
+def _durable_cfg() -> StoreConfig:
+    return StoreConfig(mode="bourbon", policy="always",
+                       lsm=LSMConfig(memtable_cap=1 << 13, file_cap=1 << 14,
+                                     l1_cap_records=1 << 16),
+                       engine=EngineConfig(seg_cap=4096), value_size=16)
+
+
+def run() -> None:
+    n = max(N_KEYS >> 1, 1 << 16)
+    keys = make_dataset("ar", n, seed=1)
+    rng = np.random.default_rng(0)
+    d = tempfile.mkdtemp(prefix="bourbon_recovery_")
+    try:
+        st = BourbonStore.open(d, _durable_cfg())
+        perm = rng.permutation(keys)
+        for off in range(0, n, 1 << 14):
+            st.put_batch(perm[off: off + (1 << 14)])
+        st.flush_all()
+        st.learn_all()
+        st.close()
+
+        # reopen with persisted models: no retraining
+        t0 = time.perf_counter()
+        st = BourbonStore.open(d, _durable_cfg())
+        reopen_us = (time.perf_counter() - t0) * 1e6
+        s = st.stats()
+        emit("recovery/reopen_persisted_models", reopen_us,
+             f"files={s['n_files']} models_recovered={s['models_recovered']}")
+        probes = rng.choice(keys, 1 << 15)
+        emit("recovery/lookup_after_reopen", time_lookups(st, probes))
+
+        # relearn-from-scratch: same store with its models stripped
+        for t in st.tree.all_files():
+            t.model = None
+        t0 = time.perf_counter()
+        st.learn_all()
+        relearn_us = (time.perf_counter() - t0) * 1e6
+        emit("recovery/reopen_relearn_scratch", reopen_us + relearn_us,
+             f"relearn_only_us={relearn_us:.0f}")
+
+        # overwrite-heavy phase, then GC
+        half = perm[: n // 2]
+        for _ in range(3):
+            for off in range(0, half.shape[0], 1 << 14):
+                st.put_batch(half[off: off + (1 << 14)])
+        st.flush_all()
+        before = st.vlog.disk_bytes()
+        emit("recovery/lookup_pre_gc", time_lookups(st, probes))
+        t0 = time.perf_counter()
+        res = st.gc_value_log(min_dead_ratio=0.3)
+        gc_us = (time.perf_counter() - t0) * 1e6
+        after = st.vlog.disk_bytes()
+        emit("recovery/gc_pass", gc_us,
+             f"reclaimed={before - after}B segs={res['segments_removed']} "
+             f"moved={res['entries_moved']}")
+        emit("recovery/lookup_post_gc", time_lookups(st, probes))
+        st.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)

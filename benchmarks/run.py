@@ -21,6 +21,9 @@ SUITES = {
     "fig15": ("bench_sosd", "SOSD datasets"),
     "fig17": ("bench_error_bound", "delta sweep + space overheads"),
     "table2": ("bench_storage", "fast-storage + limited-memory tier model"),
+    "recovery": ("bench_recovery",
+                 "durable engine: reopen w/ persisted models vs relearn; "
+                 "value-log GC"),
 }
 
 

@@ -11,20 +11,20 @@ import numpy as np
 from repro.core.datasets import make_dataset
 from repro.core.distributed import (DistStoreConfig, build_dist_get,
                                     build_dist_state)
+from repro.core.jaxcompat import make_mesh, set_mesh
 
 keys = make_dataset("ar", 1 << 16, seed=2)
 vptrs = np.arange(keys.shape[0], dtype=np.int64)
 cfg = DistStoreConfig(n_keys=keys.shape[0], probe_batch=1 << 12)
 
-mesh = jax.make_mesh((jax.device_count(),), ("data",),
-                     axis_types=(jax.sharding.AxisType.Explicit,))
+mesh = make_mesh((jax.device_count(),), ("data",), axis_type="Explicit")
 state = {k: jnp.asarray(v) for k, v in
          build_dist_state(keys, vptrs, mesh.size, cfg).items()}
 fn = build_dist_get(mesh, cfg)
 
 rng = np.random.default_rng(0)
 probes = jnp.asarray(rng.choice(keys, cfg.probe_batch))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     found, vp = fn(state, probes)
 print(f"devices={mesh.size} probes={cfg.probe_batch} "
       f"hit_rate={float(jnp.mean(found)):.3f}")

@@ -29,6 +29,7 @@ import numpy as np
 
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .jaxcompat import shard_map
 from .plr import greedy_plr_np
 
 __all__ = ["DistStoreConfig", "build_dist_state", "dist_state_specs",
@@ -186,7 +187,7 @@ def build_dist_get(mesh, cfg: DistStoreConfig, seg_search: str = "bisect",
         return found > 0, jnp.where(found > 0, vsum, -1)
 
     out_spec = probe_spec if combine == "reduce_scatter" else P()
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: state_spec,
                                {"keys": 0, "vptrs": 0, "n": 0, "lo": 0,

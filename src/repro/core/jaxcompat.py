@@ -1,0 +1,72 @@
+"""Version-guarded access to JAX APIs that moved between releases.
+
+The repo targets the modern spelling (``jax.make_mesh(axis_types=...)``,
+``jax.shard_map``, ``jax.set_mesh``) but must also run on older installs
+where meshes have no axis types, ``shard_map`` lives in
+``jax.experimental.shard_map`` (with ``check_rep`` instead of
+``check_vma``), and there is no mesh context manager (the explicit
+``mesh=`` argument to shard_map makes one unnecessary).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+__all__ = ["make_mesh", "shard_map", "set_mesh"]
+
+
+def _axis_types_kwargs(kind: str, n: int) -> dict:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (getattr(axis_type, kind),) * n}
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_type: str = "Auto",
+              devices=None):
+    """``jax.make_mesh`` with ``axis_types`` when the install supports it.
+
+    ``axis_type`` is the AxisType member name ("Auto" | "Explicit" |
+    "Manual"), applied to every axis; ignored on JAX without typed meshes.
+    Falls back through make_mesh-without-axis_types to a hand-built
+    ``Mesh`` on installs predating ``jax.make_mesh`` itself.
+    """
+    mk = getattr(jax, "make_mesh", None)
+    if mk is None:
+        from jax.experimental import mesh_utils
+        devs = mesh_utils.create_device_mesh(axis_shapes, devices=devices)
+        return jax.sharding.Mesh(devs, axis_names)
+    kwargs = _axis_types_kwargs(axis_type, len(axis_names))
+    if kwargs and "axis_types" not in inspect.signature(mk).parameters:
+        kwargs = {}  # AxisType exists but make_mesh can't take it yet
+    return mk(axis_shapes, axis_names, devices=devices, **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    # the replication-check kwarg was renamed check_rep -> check_vma during
+    # the experimental->top-level promotion; pick whichever this install has
+    params = inspect.signature(sm).parameters
+    check_kw = "check_vma" if "check_vma" in params else "check_rep"
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{check_kw: check_vma})
+
+
+def set_mesh(mesh):
+    """Context manager binding ``mesh`` for explicit-sharding code paths.
+
+    No-op on JAX without ``set_mesh``/``use_mesh`` — there shard_map's
+    explicit ``mesh=`` argument already carries the binding.
+    """
+    ctx = getattr(jax, "set_mesh", None)
+    if ctx is not None:
+        return ctx(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return contextlib.nullcontext(mesh)

@@ -12,17 +12,29 @@ first keys form the "index block" (fence keys) used by the baseline path.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 
 import numpy as np
 
 from .bloom import bloom_build_np, bloom_words
 from .plr import PLRModel, greedy_plr_np
 
-__all__ = ["SSTable", "BLOCK_RECORDS", "build_sstable"]
+__all__ = ["SSTable", "BLOCK_RECORDS", "build_sstable", "advance_file_ids"]
 
 BLOCK_RECORDS = 256  # records per data block (4KB block / 16B record in paper)
-_ids = itertools.count()
+_next_file_id = 0
+
+
+def _new_file_id() -> int:
+    global _next_file_id
+    v = _next_file_id
+    _next_file_id += 1
+    return v
+
+
+def advance_file_ids(floor: int) -> None:
+    """Keep new file ids above any recovered from a MANIFEST."""
+    global _next_file_id
+    _next_file_id = max(_next_file_id, floor)
 
 
 @dataclasses.dataclass
@@ -87,5 +99,5 @@ def build_sstable(keys: np.ndarray, seqs: np.ndarray, vptrs: np.ndarray,
         vptrs=np.ascontiguousarray(vptrs, np.int64),
         fences=np.ascontiguousarray(fences, np.int64),
         bloom=bloom, bloom_k=bloom_k, level=level,
-        file_id=next(_ids), created_at=now,
+        file_id=_new_file_id(), created_at=now,
     )

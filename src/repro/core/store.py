@@ -18,6 +18,7 @@ benchmarks measure the real tensor-path latencies separately.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 
 import numpy as np
@@ -49,6 +50,10 @@ class StoreConfig:
     costs: CostModel = dataclasses.field(default_factory=CostModel)
     value_size: int = 64
     fetch_values: bool = False
+    # durability (repro.storage): None = in-memory store (seed behavior)
+    storage_dir: str | None = None
+    vlog_seg_slots: int = 1 << 12     # value-log entries per segment file
+    fsync: bool = False               # fsync every append (power-loss safe)
 
     def __post_init__(self):
         self.engine.plr_delta = self.lsm.plr_delta
@@ -63,7 +68,10 @@ class BourbonStore:
         self.clock = VirtualClock()
         self.tree = LSMTree(cfg.lsm)
         self.memtable = MemTable(cfg.lsm.memtable_cap)
-        self.vlog = ValueLog(cfg.value_size)
+        # durable stores get a DurableValueLog from _attach_storage below —
+        # don't allocate a throwaway in-memory arena for them
+        self.vlog = ValueLog(cfg.value_size) if cfg.storage_dir is None \
+            else None
         self.engine = LookupEngine(cfg.engine)
         self.cba = CostBenefitAnalyzer(cfg.cba, cfg.costs)
         self.executor = LearningExecutor(self.cba, cfg.costs,
@@ -80,42 +88,159 @@ class BourbonStore:
         self.lookups_baseline_path = 0
         self.n_gets = 0
         self.n_puts = 0
+        # durability (repro.storage)
+        self._storage = None
+        self._closed = False
+        self._events_persisted = 0
+        self._models_swept_at = 0
+        self.models_recovered = 0
+        if cfg.storage_dir is not None:
+            self._attach_storage(cfg.storage_dir)
+
+    # ------------------------------------------------------------- lifecycle
+    @classmethod
+    def open(cls, path, cfg: StoreConfig | None = None) -> "BourbonStore":
+        """Open (or create) a durable store at ``path``.
+
+        An existing directory is recovered: MANIFEST replay rebuilds the
+        levels from mmap'd sstables (persisted PLR models reload without
+        retraining), the value log is reloaded, and the WAL is replayed
+        into the memtable.
+        """
+        cfg = cfg if cfg is not None else StoreConfig()
+        # deep copy: the caller's config (and its nested lsm/engine/cba)
+        # must not be shared with or mutated through this store
+        cfg = copy.deepcopy(cfg)
+        cfg.storage_dir = str(path)
+        return cls(cfg)
+
+    def _attach_storage(self, path: str) -> None:
+        # imported lazily: repro.storage depends on repro.core submodules
+        from repro.storage import DurableValueLog, StorageEngine, load_tables
+        self._storage = StorageEngine(path, fsync=self.cfg.fsync)
+        try:
+            # validate (or record, on a fresh dir) the store geometry
+            # before any segment file is parsed with a possibly-wrong
+            # entry size or models served with a smaller search window
+            self._storage.ensure_format(self.cfg.value_size,
+                                        self.cfg.vlog_seg_slots,
+                                        self.cfg.lsm.plr_delta)
+            if self._storage.recovered:
+                self._recover(load_tables, DurableValueLog)
+            else:
+                self.vlog = DurableValueLog(self.cfg.value_size, path,
+                                            seg_slots=self.cfg.vlog_seg_slots,
+                                            fsync=self.cfg.fsync)
+        except BaseException:
+            # release the directory lock: a failed open must not wedge the
+            # next (correctly configured) one
+            self._storage.abort()
+            self._storage = None
+            raise
+
+    def _recover(self, load_tables, durable_vlog_cls) -> None:
+        eng = self._storage
+        state = eng.state
+        self.tree.levels = load_tables(eng.dir, state)
+        for t in self.tree.all_files():
+            if t.model is not None:
+                eng.persisted_models.add(t.file_id)
+        self.models_recovered = len(eng.persisted_models)
+        self.vlog = durable_vlog_cls.open(
+            eng.dir, self.cfg.value_size, self.cfg.vlog_seg_slots,
+            state.vlog_removed, state.vhead, fsync=self.cfg.fsync)
+        self.clock.advance(state.clock)
+        self._seq = state.seq
+        for keys, seqs, vptrs in eng.replay_old_wal():
+            if seqs.shape[0]:
+                self._seq = max(self._seq, int(seqs.max()) + 1)
+            self._ingest(keys, seqs, vptrs)
+        # if replay flushed, flush the remainder too so the recovery WAL
+        # (whose records would otherwise re-flush into duplicate tables on
+        # every reopen) can be rotated away empty
+        if self._events_persisted and len(self.memtable):
+            self._flush()
+        eng.finish_recovery(self._seq, self.clock.now, len(self.vlog),
+                            rotate=bool(self._events_persisted))
+        # recovered-but-unlearned files re-enter the learning pipeline
+        self._pending_wait.extend(
+            t for t in self.tree.all_files() if t.model is None)
+        self._level_model_versions = list(self.tree.level_version)
+        # level models are not persisted (ROADMAP open item): resubmit the
+        # learning jobs, else a reopened level-granularity store would
+        # serve the baseline path forever.  Skip levels a replay-flush
+        # already submitted via _after_structure_change.
+        if (self.cfg.granularity == "level" and self.cfg.mode == "bourbon"
+                and self.cfg.policy != "offline"):
+            queued = {j.level for j in self.executor.queue if j.is_level}
+            queued |= {j.level for _, j in self.executor.running
+                       if j.is_level}
+            for i in range(1, N_LEVELS):
+                if self.tree.levels[i] and i not in queued:
+                    self.executor.submit_level(self.tree, i, self.clock.now)
+
+    def close(self) -> None:
+        """Release durable resources.  The memtable is NOT flushed — the
+        WAL re-derives it on the next open (exercising the recovery path
+        even on clean shutdown)."""
+        if self._storage is None:
+            return
+        self.vlog.close()
+        self._storage.close(self._seq, self.clock.now, len(self.vlog))
+        self._storage = None
+        self._closed = True  # a closed durable store must not accept writes
+
+    def _check_writable(self) -> None:
+        if self._closed:
+            raise RuntimeError("store is closed — writes would be silently "
+                               "non-durable; reopen with BourbonStore.open()")
 
     # ------------------------------------------------------------------ write
     def put_batch(self, keys: np.ndarray, values: np.ndarray | None = None) -> None:
+        self._check_writable()
         keys = np.asarray(keys, np.int64)
         b = keys.shape[0]
         if values is None:
             values = np.zeros((b, self.cfg.value_size), np.uint8)
             values[:, 0] = (keys & 0xFF).astype(np.uint8)
-        vptrs = self.vlog.append_batch(values)
         seqs = np.arange(self._seq, self._seq + b, dtype=np.int64)
         self._seq += b
-        off = 0
-        while off < b:
-            took = self.memtable.put_batch(keys[off:], seqs[off:], vptrs[off:])
-            off += took
-            if self.memtable.full:
-                self._flush()
+        vptrs = self.vlog.append_kv(keys, seqs, values)
+        self._ingest(keys, seqs, vptrs)
         self.n_puts += b
         self.foreground_us += self.cfg.costs.t_put * b
         self.clock.advance(self.cfg.costs.t_put * b)
         self._tick()
 
     def delete_batch(self, keys: np.ndarray) -> None:
+        self._check_writable()
         keys = np.asarray(keys, np.int64)
         b = keys.shape[0]
         seqs = np.arange(self._seq, self._seq + b, dtype=np.int64)
         self._seq += b
         vptrs = np.full(b, -1, np.int64)  # tombstones
-        off = 0
-        while off < b:
-            took = self.memtable.put_batch(keys[off:], seqs[off:], vptrs[off:])
-            off += took
-            if self.memtable.full:
-                self._flush()
+        self._ingest(keys, seqs, vptrs)
         self.clock.advance(self.cfg.costs.t_put * b)
         self._tick()
+
+    def _ingest(self, keys: np.ndarray, seqs: np.ndarray,
+                vptrs: np.ndarray) -> None:
+        """Memtable insertion in WAL-aligned chunks: each chunk is logged
+        durably before it enters the memtable, and a flush only ever runs
+        with the WAL covering exactly the drained records (so rotation at
+        flush time cannot drop acknowledged writes)."""
+        b = keys.shape[0]
+        off = 0
+        while off < b:
+            take = min(self.memtable.capacity - len(self.memtable), b - off)
+            sl = slice(off, off + take)
+            if self._storage is not None:
+                self._storage.wal_append(keys[sl], seqs[sl], vptrs[sl])
+            took = self.memtable.put_batch(keys[sl], seqs[sl], vptrs[sl])
+            assert took == take
+            off += take
+            if self.memtable.full:
+                self._flush()
 
     def _flush(self) -> None:
         k, s, v = self.memtable.drain_sorted()
@@ -125,7 +250,30 @@ class BourbonStore:
             self._pending_wait.extend(
                 t for lvl in self.tree.levels for t in lvl
                 if t.file_id in ev.created)
+        if self._storage is not None:
+            self._persist_structure()
         self._after_structure_change()
+
+    def _persist_structure(self) -> None:
+        """Durably commit the flush/compaction batch that just settled:
+        net-new files are written, net deletions recorded, and the WAL
+        rotated (the memtable is empty here, so the old WAL is covered)."""
+        events = self.tree.events[self._events_persisted:]
+        if not events:
+            return
+        created: list[int] = []
+        deleted: set[int] = set()
+        for ev in events:
+            created.extend(ev.created)
+            deleted.update(ev.deleted)
+        live_by_id = {t.file_id: t for t in self.tree.all_files()}
+        add_tables = [live_by_id[fid] for fid in created
+                      if fid in live_by_id]
+        self._storage.persist_flush(add_tables, sorted(deleted), self._seq,
+                                    self.clock.now, len(self.vlog))
+        # only after the commit landed: a transient I/O error above must
+        # leave these events pending, not silently dropped
+        self._events_persisted = len(self.tree.events)
 
     def _after_structure_change(self) -> None:
         # drain dead files into CBA stats
@@ -162,6 +310,16 @@ class BourbonStore:
                     still.append(t)
             self._pending_wait = still
         self.executor.tick(self.tree, self.clock.now, self.level_models)
+        if (self._storage is not None
+                and self.executor.files_learned != self._models_swept_at):
+            self._models_swept_at = self.executor.files_learned
+            self._persist_new_models()
+
+    def _persist_new_models(self) -> None:
+        """Append just-learned PLR models into their sstable files."""
+        for t in self.tree.all_files():
+            if t.model is not None:
+                self._storage.persist_model(t)
 
     # ------------------------------------------------------------------ read
     def _engine_mode(self) -> str:
@@ -264,7 +422,9 @@ class BourbonStore:
     def learn_all(self) -> int:
         """Synchronously learn every live file (or level) — used to set up
         read-only experiments and ``offline`` mode initial models."""
+        self._check_writable()   # a closed store could not persist models
         n = 0
+        n_file_models = 0
         if self.cfg.granularity == "level":
             from .plr import greedy_plr_np
             for i in range(1, N_LEVELS):
@@ -276,23 +436,117 @@ class BourbonStore:
                     n += 1
             # L0 cannot be level-learned (overlapping ranges) -> file models
             for t in self.tree.levels[0]:
-                t.learn(self.cfg.lsm.plr_delta, pad_to=self.cfg.engine.seg_cap)
-                n += 1
-            return n
-        for lvl in self.tree.levels:
-            for t in lvl:
                 if t.model is None:
                     t.learn(self.cfg.lsm.plr_delta,
                             pad_to=self.cfg.engine.seg_cap)
-                    n += 1
-        self.executor.files_learned += n
+                    n_file_models += 1
+        else:
+            for lvl in self.tree.levels:
+                for t in lvl:
+                    if t.model is None:
+                        t.learn(self.cfg.lsm.plr_delta,
+                                pad_to=self.cfg.engine.seg_cap)
+                        n_file_models += 1
+        n += n_file_models
+        self.executor.files_learned += n_file_models
+        if self._storage is not None:
+            self._models_swept_at = self.executor.files_learned
+            self._persist_new_models()
         return n
 
     def flush_all(self) -> None:
         """Flush memtable + settle compactions (load-phase end)."""
+        self._check_writable()
         if len(self.memtable):
             self._flush()
         self._tick()
+
+    # --------------------------------------------------------------- vlog GC
+    def _host_get_vptrs(self, keys: np.ndarray) -> np.ndarray:
+        """Authoritative host-side lookup: current vptr per key, -2 when the
+        key is absent (tombstones return -1).  Newest seq wins across the
+        memtable and every level — the liveness oracle for value-log GC."""
+        n = keys.shape[0]
+        best_vp = np.full(n, -2, np.int64)
+        best_seq = np.full(n, -1, np.int64)
+        mt_found, mt_vp = self.memtable.get_batch(keys)
+        best_vp[mt_found] = mt_vp[mt_found]
+        # memtable versions are strictly newer than anything flushed
+        best_seq[mt_found] = np.iinfo(np.int64).max
+        for t in self.tree.all_files():
+            idx = np.searchsorted(t.keys, keys)
+            idx_c = np.minimum(idx, t.n - 1)
+            hit = t.keys[idx_c] == keys
+            newer = hit & (t.seqs[idx_c] > best_seq)
+            best_vp[newer] = t.vptrs[idx_c[newer]]
+            best_seq[newer] = t.seqs[idx_c[newer]]
+        return best_vp
+
+    def gc_value_log(self, min_dead_ratio: float = 0.3,
+                     max_segments: int | None = None) -> dict:
+        """WiscKey value-log GC (§2.2): scan sealed segments, relocate live
+        entries to the head (updating their pointers through the LSM via a
+        fresh-seq put), and delete segments whose dead ratio exceeds the
+        threshold.  Returns reclamation stats."""
+        self._check_writable()
+        if self._storage is None:
+            raise RuntimeError("value-log GC requires a durable store "
+                               "(BourbonStore.open(path))")
+        removed: list[int] = []
+        moved = 0
+        reclaimed = 0
+        # Liveness is checked in chunks of segments with one batched
+        # full-LSM scan per chunk (a per-segment scan would make GC
+        # quadratic in store size), and chunking keeps max_segments from
+        # scanning the whole sealed log.  A chunk's snapshot stays valid
+        # through its loop: a key's sealed entry only changes liveness when
+        # its own segment is relocated, and relocated entries land in
+        # unsealed head segments.
+        sealed = self.vlog.sealed_segments()
+        chunk_size = 64
+        done = False
+        for start in range(0, len(sealed), chunk_size):
+            if done:
+                break
+            seg_meta = []
+            for seg in sealed[start: start + chunk_size]:
+                ptrs, keys, _seqs, _ = self.vlog.read_segment(
+                    seg, with_values=False)
+                seg_meta.append((seg, ptrs, keys))
+            cur = self._host_get_vptrs(
+                np.concatenate([m[2] for m in seg_meta]))
+            off = 0
+            for seg, ptrs, keys in seg_meta:
+                live = cur[off: off + ptrs.shape[0]] == ptrs
+                off += ptrs.shape[0]
+                if max_segments is not None and len(removed) >= max_segments:
+                    done = True
+                    break
+                dead_ratio = (1.0 - float(live.mean())
+                              if ptrs.shape[0] else 1.0)
+                if dead_ratio < min_dead_ratio:
+                    continue
+                # victim re-read with payloads (page-cache warm from the
+                # liveness pass)
+                _p, _k, _s, values = self.vlog.read_segment(seg)
+                lk, lv = keys[live], values[live]
+                if lk.shape[0]:
+                    new_seqs = np.arange(self._seq, self._seq + lk.shape[0],
+                                         dtype=np.int64)
+                    self._seq += lk.shape[0]
+                    new_ptrs = self.vlog.append_kv(lk, new_seqs, lv)
+                    self._ingest(lk, new_seqs, new_ptrs)
+                    moved += lk.shape[0]
+                # manifest edit BEFORE the unlink: a crash in between leaves
+                # a removed-but-present file, which recovery cleans up; the
+                # other order would leave a missing file the log references
+                self._storage.persist_gc([seg], self._seq, self.clock.now,
+                                         len(self.vlog))
+                reclaimed += self.vlog.drop_segment(seg)
+                removed.append(seg)
+        return {"segments_removed": len(removed),
+                "bytes_reclaimed": reclaimed,
+                "entries_moved": moved}
 
     def drain_learning(self, max_us: float = 1e12) -> None:
         """Advance virtual time until the learning queue is empty."""
@@ -309,7 +563,7 @@ class BourbonStore:
         model_bytes = sum(t.model.nbytes for t in files if t.model is not None)
         data_bytes = sum(t.n * 24 for t in files)
         segs = [int(t.model.n_segments) for t in files if t.model is not None]
-        return {
+        out = {
             "n_files": len(files),
             "n_records": self.tree.total_records(),
             "n_learned": n_learned,
@@ -328,3 +582,10 @@ class BourbonStore:
             "level_failures": self.executor.level_failures,
             "cba_decisions": dict(self.cba.decisions),
         }
+        if self._storage is not None:
+            out.update(
+                models_recovered=self.models_recovered,
+                vlog_disk_bytes=self.vlog.disk_bytes(),
+                vlog_segments_removed=len(self.vlog.removed),
+            )
+        return out

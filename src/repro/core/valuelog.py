@@ -34,6 +34,14 @@ class ValueLog:
         self._device = None
         return ptrs
 
+    def append_kv(self, keys: np.ndarray, seqs: np.ndarray,
+                  values: np.ndarray) -> np.ndarray:
+        """Append with key/seq metadata.  The in-memory log has no use for
+        them; the durable log (repro.storage.vlog) persists them so GC can
+        test entry liveness against the LSM."""
+        del keys, seqs
+        return self.append_batch(values)
+
     def get_batch_np(self, ptrs: np.ndarray) -> np.ndarray:
         ok = (ptrs >= 0) & (ptrs < self._head)
         safe = np.where(ok, ptrs, 0)

@@ -1,0 +1,220 @@
+"""StorageEngine: directory layout + durability orchestration.
+
+Owns the WAL writer, the MANIFEST writer, and the SSTable files for one
+store directory::
+
+    <dir>/CURRENT           name of the live MANIFEST
+    <dir>/MANIFEST-000001   crc-framed JSON version edits
+    <dir>/wal-0000NN.log    crc-framed memtable records (rotated per flush)
+    <dir>/0000NN.sst        sstables (keys/seqs/vptrs/bloom/fences/model)
+    <dir>/vlog-0000NN.seg   value-log segments (owned by DurableValueLog)
+
+Commit ordering per flush: table files first (atomic ``os.replace``), then
+the MANIFEST edit that references them together with the post-rotation WAL
+number, then the new WAL is opened and the old one deleted.  A crash
+between any two steps leaves either unreferenced files (garbage, cleaned
+lazily) or a WAL that fully re-derives the memtable — never a referenced
+file that doesn't exist.
+"""
+
+from __future__ import annotations
+
+import fcntl
+import os
+
+import numpy as np
+
+from .format import sst_path, wal_path
+from .manifest import ManifestState, ManifestWriter, read_manifest
+from .sstable_io import append_model, write_sstable
+from .wal import WALWriter, replay_wal
+
+__all__ = ["StorageEngine"]
+
+
+class StorageEngine:
+    def __init__(self, dirpath: str, fsync: bool = False) -> None:
+        os.makedirs(dirpath, exist_ok=True)
+        self.dir = dirpath
+        self.fsync = fsync
+        self.persisted_models: set[int] = set()
+        # one writer per directory: flock dies with the process, so a
+        # crashed holder never wedges the store
+        self._lock_f = open(os.path.join(dirpath, "LOCK"), "w")
+        try:
+            fcntl.flock(self._lock_f, fcntl.LOCK_EX | fcntl.LOCK_NB)
+        except OSError:
+            self._lock_f.close()
+            raise RuntimeError(
+                f"store at {dirpath!r} is already open in another process")
+        try:
+            self._init_logs(dirpath, fsync)
+        except BaseException:
+            # release the flock: a failed construction (e.g. corrupt
+            # CURRENT) must not wedge the next open in this process
+            fcntl.flock(self._lock_f, fcntl.LOCK_UN)
+            self._lock_f.close()
+            raise
+
+    def _init_logs(self, dirpath: str, fsync: bool) -> None:
+        existing = read_manifest(dirpath)
+        if existing is None:
+            self.state = ManifestState(live={})
+            self.manifest = ManifestWriter(dirpath, 1, fsync)
+            self.wal_no = 1
+            self.old_wal_no = self.wal_no
+            edit = {"wal": self.wal_no}
+            self.manifest.append(edit)
+            self.state.apply(edit)
+            self.recovered = False
+        else:
+            self.state, manifest_no = existing
+            self.manifest = ManifestWriter(dirpath, manifest_no, fsync)
+            self.recovered = True
+            # Recovery WAL protocol: never append to the pre-crash WAL.
+            # Its records are re-ingested into a fresh wal-<n+1>; only after
+            # that does a manifest edit acknowledge the new number and the
+            # old file get deleted (finish_recovery).  Stray WALs from a
+            # crashed recovery hold duplicates of acknowledged records —
+            # remove them before they can be appended to.
+            self.old_wal_no = self.state.wal_no
+            for name in os.listdir(dirpath):
+                if (name.startswith("wal-") and
+                        name != os.path.basename(
+                            wal_path(dirpath, self.old_wal_no))):
+                    os.unlink(os.path.join(dirpath, name))
+            self.wal_no = self.old_wal_no + 1
+        # while True, the WAL is neither rotated nor acknowledged in the
+        # manifest: a crash mid-recovery must re-derive everything from the
+        # still-referenced pre-crash WAL
+        self.in_recovery = self.recovered
+        self.wal = WALWriter(wal_path(dirpath, self.wal_no), fsync)
+
+    def ensure_format(self, value_size: int, seg_slots: int,
+                      plr_delta: int) -> None:
+        """Record the store geometry at creation; refuse to open with a
+        different one.  Wrong entry size would destroy the segment files;
+        wrong plr_delta would silently shrink the model-path search window
+        below the persisted models' error bound and lose reads."""
+        if self.state.value_size is None:
+            edit = {"vsize": value_size, "vslots": seg_slots,
+                    "pdelta": plr_delta}
+            self.manifest.append(edit)
+            self.state.apply(edit)
+            return
+        want = (value_size, seg_slots, plr_delta)
+        have = (self.state.value_size, self.state.seg_slots,
+                self.state.plr_delta)
+        if have != want:
+            raise ValueError(
+                f"store was created with (value_size, vlog_seg_slots, "
+                f"plr_delta)={have}; refusing to open with {want}")
+
+    # ------------------------------------------------------------------- wal
+    def wal_append(self, keys: np.ndarray, seqs: np.ndarray,
+                   vptrs: np.ndarray) -> None:
+        self.wal.append(keys, seqs, vptrs)
+
+    def replay_old_wal(self):
+        """Batches from the pre-crash WAL (recovery re-ingests them into a
+        fresh WAL before ``finish_recovery`` removes this one)."""
+        return replay_wal(wal_path(self.dir, self.old_wal_no))
+
+    def finish_recovery(self, seq: int, clock: float, vhead: int,
+                        rotate: bool = False) -> None:
+        """Acknowledge the recovery WAL in the manifest, drop the old one.
+        Only now may flushes rotate the WAL again.
+
+        ``rotate=True`` when the replay flushed everything to sstables
+        (memtable empty): the recovery WAL's records are all redundant, so
+        a fresh empty WAL replaces it — otherwise each reopen cycle would
+        re-flush the same records into duplicate tables."""
+        ack_wal = self.wal_no + 1 if rotate else self.wal_no
+        edit = {"wal": ack_wal, "seq": seq, "clock": clock, "vhead": vhead}
+        self.manifest.append(edit)
+        self.state.apply(edit)
+        self.in_recovery = False
+        if rotate:
+            self.drop_old_wal(self._rotate_wal())
+        self.drop_old_wal(self.old_wal_no)
+
+    def drop_old_wal(self, old_no: int) -> None:
+        if old_no != self.wal_no:
+            path = wal_path(self.dir, old_no)
+            if os.path.exists(path):
+                os.unlink(path)
+
+    def _rotate_wal(self) -> int:
+        """Close the current WAL, open the next; returns the old number.
+        Callers must only rotate when the memtable is empty (post-flush)
+        and AFTER a manifest edit acknowledging wal_no+1 is durable — a
+        manifest pointing at a not-yet-created WAL replays as empty, which
+        is correct; the reverse order would let acknowledged writes land
+        in a WAL the next recovery's stray sweep deletes."""
+        self.wal.close()
+        old = self.wal_no
+        self.wal_no += 1
+        self.wal = WALWriter(wal_path(self.dir, self.wal_no), self.fsync)
+        return old
+
+    # ----------------------------------------------------------------- flush
+    def persist_flush(self, add_tables: list, delete_ids: list,
+                      seq: int, clock: float, vhead: int) -> None:
+        """Durably commit one flush/compaction batch and rotate the WAL.
+
+        During recovery the rotation (and the manifest's WAL field) is
+        withheld: un-replayed batches may still live only in the pre-crash
+        WAL, and acknowledging a newer number would let the next recovery's
+        stray-WAL sweep delete them."""
+        for t in add_tables:
+            write_sstable(self.dir, t, self.fsync)
+            if t.model is not None:
+                self.persisted_models.add(t.file_id)
+        edit = {
+            "add": [[t.file_id, t.level] for t in add_tables],
+            "del": [fid for fid in delete_ids if fid in self.state.live],
+            "seq": seq, "clock": clock, "vhead": vhead,
+        }
+        if not self.in_recovery:
+            edit["wal"] = self.wal_no + 1
+        self.manifest.append(edit)
+        self.state.apply(edit)
+        for fid in edit["del"]:
+            self.persisted_models.discard(fid)
+            path = sst_path(self.dir, fid)
+            if os.path.exists(path):
+                os.unlink(path)
+        if not self.in_recovery:
+            self.drop_old_wal(self._rotate_wal())
+
+    # ----------------------------------------------------------------- model
+    def persist_model(self, table) -> None:
+        if table.file_id in self.persisted_models:
+            return
+        if table.file_id not in self.state.live:
+            return  # died before its model landed; nothing on disk to patch
+        append_model(sst_path(self.dir, table.file_id), table.model,
+                     self.fsync)
+        self.persisted_models.add(table.file_id)
+
+    # -------------------------------------------------------------------- gc
+    def persist_gc(self, removed_segs: list[int], seq: int, clock: float,
+                   vhead: int) -> None:
+        edit = {"vlog_rm": list(removed_segs), "seq": seq, "clock": clock,
+                "vhead": vhead}
+        self.manifest.append(edit)
+        self.state.apply(edit)
+
+    # ----------------------------------------------------------------- close
+    def close(self, seq: int, clock: float, vhead: int) -> None:
+        self.manifest.append({"seq": seq, "clock": clock, "vhead": vhead})
+        self.abort()
+
+    def abort(self) -> None:
+        """Release handles and the directory lock without a final edit —
+        used when open() fails after the engine was constructed."""
+        self.manifest.close()
+        self.wal.close()
+        if not self._lock_f.closed:
+            fcntl.flock(self._lock_f, fcntl.LOCK_UN)
+            self._lock_f.close()

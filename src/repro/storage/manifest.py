@@ -1,0 +1,116 @@
+"""MANIFEST: a version-edit log tracking live files across flushes,
+compactions, and value-log GC (LevelDB-style, one JSON edit per frame).
+
+Each edit may carry::
+
+    add       [[file_id, level], ...]   tables that became live
+    del       [file_id, ...]            tables retired by compaction
+    wal       int                       current WAL number after rotation
+    seq       int                       next sequence number high-water mark
+    clock     float                     virtual-clock high-water mark
+    vhead     int                       value-log head (next global slot)
+    vlog_rm   [segment_id, ...]         value-log segments reclaimed by GC
+    vsize     int                       value size (fixed at creation)
+    vslots    int                       value-log slots per segment
+    pdelta    int                       PLR error bound models were fit with
+
+``CURRENT`` names the live manifest file.  Replaying the edits in order
+yields the exact live-file set and counters; frames use the shared
+crc-framed encoding, so a torn final edit is dropped (its files were
+written with ``os.replace`` and simply become unreferenced garbage).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from .format import (CURRENT, fsync_dir, manifest_name, read_frames,
+                     valid_frames_end, write_frame)
+
+__all__ = ["ManifestState", "ManifestWriter", "read_manifest"]
+
+
+@dataclasses.dataclass
+class ManifestState:
+    live: dict          # file_id -> level
+    wal_no: int = 0
+    seq: int = 0
+    clock: float = 0.0
+    vhead: int = 0
+    vlog_removed: set = dataclasses.field(default_factory=set)
+    value_size: int | None = None   # vlog entry geometry, fixed at creation
+    seg_slots: int | None = None
+    plr_delta: int | None = None    # error bound the persisted models carry
+
+    def apply(self, edit: dict) -> None:
+        if "vsize" in edit:
+            self.value_size = edit["vsize"]
+        if "vslots" in edit:
+            self.seg_slots = edit["vslots"]
+        if "pdelta" in edit:
+            self.plr_delta = edit["pdelta"]
+        for fid in edit.get("del", []):
+            self.live.pop(fid, None)
+        for fid, level in edit.get("add", []):
+            self.live[fid] = level
+        if "wal" in edit:
+            self.wal_no = edit["wal"]
+        if "seq" in edit:
+            self.seq = max(self.seq, edit["seq"])
+        if "clock" in edit:
+            self.clock = max(self.clock, edit["clock"])
+        if "vhead" in edit:
+            self.vhead = max(self.vhead, edit["vhead"])
+        for seg in edit.get("vlog_rm", []):
+            self.vlog_removed.add(seg)
+
+
+class ManifestWriter:
+    def __init__(self, dirpath: str, no: int = 1, fsync: bool = False) -> None:
+        self.path = os.path.join(dirpath, manifest_name(no))
+        self.fsync = fsync
+        # drop a crash-torn trailing frame before appending: edits written
+        # after garbage bytes would be invisible to every future replay
+        end = valid_frames_end(self.path)
+        if os.path.exists(self.path) and os.path.getsize(self.path) != end:
+            with open(self.path, "r+b") as f:
+                f.truncate(end)
+        self._f = open(self.path, "ab")
+        current = os.path.join(dirpath, CURRENT)
+        if not os.path.exists(current):
+            tmp = current + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(manifest_name(no))
+                if fsync:
+                    f.flush()
+                    os.fsync(f.fileno())
+            os.replace(tmp, current)
+            if fsync:
+                fsync_dir(dirpath)
+
+    def append(self, edit: dict) -> None:
+        write_frame(self._f, json.dumps(edit, sort_keys=True).encode())
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+            self._f.close()
+
+
+def read_manifest(dirpath: str) -> tuple[ManifestState, int] | None:
+    """Replay the manifest named by CURRENT; None if the dir is fresh."""
+    current = os.path.join(dirpath, CURRENT)
+    if not os.path.exists(current):
+        return None
+    with open(current) as f:
+        name = f.read().strip()
+    no = int(name.rsplit("-", 1)[1])
+    state = ManifestState(live={})
+    for payload in read_frames(os.path.join(dirpath, name)):
+        state.apply(json.loads(payload.decode()))
+    return state, no

@@ -1,0 +1,60 @@
+"""Recovery: MANIFEST replay -> live SSTables (mmap) -> WAL re-ingestion.
+
+``load_tables`` turns a replayed :class:`ManifestState` into per-level
+lists of mmap-backed :class:`SSTable` objects, with their persisted PLR
+models reconstructed (no retraining — the whole point of serializing the
+segments into the table files).  Unreferenced ``.sst`` files (a crash
+between file write and manifest edit) are deleted as garbage.
+
+The store drives the rest of the protocol: it re-ingests the old WAL's
+batches through its normal write path (so they land in the fresh WAL and,
+if the memtable fills, in new sstables), then calls
+``StorageEngine.finish_recovery``.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.core.lsm import N_LEVELS
+from repro.core.sstable import SSTable, advance_file_ids
+
+from .format import sst_path
+from .manifest import ManifestState
+from .sstable_io import load_sstable
+
+__all__ = ["load_tables"]
+
+
+def load_tables(dirpath: str, state: ManifestState,
+                verify: bool = True) -> list[list[SSTable]]:
+    """Returns levels[0..N_LEVELS-1] rebuilt from the manifest's live set.
+
+    L0 is ordered newest-first (higher file_id = later flush); deeper
+    levels are sorted by min_key (disjoint ranges).
+    """
+    levels: list[list[SSTable]] = [[] for _ in range(N_LEVELS)]
+    for fid, level in state.live.items():
+        t = load_sstable(sst_path(dirpath, fid), verify=verify)
+        if t.level != level or t.file_id != fid:
+            raise ValueError(
+                f"manifest/file mismatch for {fid}: "
+                f"file says (id={t.file_id}, level={t.level}), "
+                f"manifest says level {level}")
+        levels[level].append(t)
+    levels[0].sort(key=lambda t: t.file_id, reverse=True)
+    for li in range(1, N_LEVELS):
+        levels[li].sort(key=lambda t: t.min_key)
+    if state.live:
+        advance_file_ids(max(state.live) + 1)
+
+    # sweep unreferenced table files (crash between write and manifest
+    # edit) and orphaned .tmp files (crash before the atomic os.replace)
+    for name in os.listdir(dirpath):
+        if name.endswith(".tmp"):
+            os.unlink(os.path.join(dirpath, name))
+        elif name.endswith(".sst"):
+            fid = int(name.split(".")[0])
+            if fid not in state.live:
+                os.unlink(os.path.join(dirpath, name))
+    return levels

@@ -1,0 +1,71 @@
+"""Write-ahead log: memtable contents survive a crash.
+
+One frame per ingested sub-batch: ``[op u8][count u32]`` followed by the
+raw ``keys/seqs/vptrs`` int64 arrays.  Tombstones ride as ordinary records
+with ``vptr == -1``, so a single record type covers puts and deletes.
+
+The WAL is rotated at every flush: once the drained memtable is durable as
+an SSTable (and the MANIFEST edit recording it is on disk), a fresh
+``wal-<n+1>.log`` starts and the old file is deleted.  Replay therefore
+only ever concerns records newer than the last flush.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+from .format import fsync_dir, read_frames, write_frame
+
+__all__ = ["WALWriter", "replay_wal"]
+
+_REC_HDR = struct.Struct("<BI")
+_OP_PUT = 1
+
+
+class WALWriter:
+    def __init__(self, path: str, fsync: bool = False) -> None:
+        self.path = path
+        self.fsync = fsync
+        created = not os.path.exists(path)
+        self._f = open(path, "ab")
+        if fsync and created:
+            fsync_dir(os.path.dirname(path))  # the new entry must persist
+
+    def append(self, keys: np.ndarray, seqs: np.ndarray,
+               vptrs: np.ndarray) -> None:
+        payload = (_REC_HDR.pack(_OP_PUT, keys.shape[0])
+                   + np.ascontiguousarray(keys, np.int64).tobytes()
+                   + np.ascontiguousarray(seqs, np.int64).tobytes()
+                   + np.ascontiguousarray(vptrs, np.int64).tobytes())
+        write_frame(self._f, payload)
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+            self._f.close()
+
+
+def replay_wal(path: str) -> list[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Return the complete (keys, seqs, vptrs) batches in append order.
+
+    Torn tails (partial frame / bad crc) end the log silently — those
+    records were never acknowledged.
+    """
+    out = []
+    for payload in read_frames(path):
+        op, count = _REC_HDR.unpack_from(payload, 0)
+        if op != _OP_PUT:
+            break  # unknown record type: treat as corruption, stop replay
+        body = payload[_REC_HDR.size:]
+        if len(body) != 3 * 8 * count:
+            break
+        arr = np.frombuffer(body, np.int64)
+        out.append((arr[:count].copy(), arr[count:2 * count].copy(),
+                    arr[2 * count:].copy()))
+    return out

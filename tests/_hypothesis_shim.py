@@ -1,0 +1,82 @@
+"""Minimal stand-in for the hypothesis API used by this test suite.
+
+When the real ``hypothesis`` package is unavailable (bare containers), the
+property tests fall back to this shim: each ``@given`` test runs
+``max_examples`` times with values drawn from seeded ``random.Random``
+instances, so failures are reproducible.  Only the strategies the suite
+actually uses are implemented (integers, sampled_from, lists).
+"""
+
+from __future__ import annotations
+
+import random
+
+__all__ = ["given", "settings", "st"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class settings:
+    """Accepts (and mostly ignores) hypothesis settings kwargs."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_max_examples = self.max_examples
+        return fn
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(lo, hi))
+
+
+def _sampled_from(choices) -> _Strategy:
+    seq = list(choices)
+    return _Strategy(lambda r: r.choice(seq))
+
+
+def _lists(elem: _Strategy, min_size: int = 0, max_size: int = 10,
+           unique: bool = False) -> _Strategy:
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        if not unique:
+            return [elem.draw(r) for _ in range(n)]
+        out: set = set()
+        attempts = 0
+        while len(out) < n and attempts < 100 * (n + 1):
+            out.add(elem.draw(r))
+            attempts += 1
+        if len(out) < min_size:   # hypothesis treats min_size as hard
+            raise ValueError(
+                f"could not draw {min_size} unique elements "
+                f"(domain too small?)")
+        return list(out)
+    return _Strategy(draw)
+
+
+class st:
+    integers = staticmethod(_integers)
+    sampled_from = staticmethod(_sampled_from)
+    lists = staticmethod(_lists)
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for example in range(n):
+                rng = random.Random(example)
+                drawn = [s.draw(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+        # NOT functools.wraps: exposing the wrapped signature would make
+        # pytest treat the drawn parameters as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -8,6 +8,7 @@ import pytest
 from repro.core.datasets import make_dataset
 from repro.core.distributed import (DistStoreConfig, build_dist_get,
                                     build_dist_state, dist_get_local)
+from repro.core.jaxcompat import make_mesh, set_mesh
 
 
 def test_local_shard_lookup():
@@ -35,8 +36,7 @@ def test_dist_get_shardmap_single_device():
     keys = make_dataset("ar", 2048, seed=5)
     vptrs = np.arange(2048, dtype=np.int64)
     cfg = DistStoreConfig(n_keys=2048, probe_batch=128)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Explicit,))
+    mesh = make_mesh((1,), ("data",), axis_type="Explicit")
     state_np = build_dist_state(keys, vptrs, n_shards=1, cfg=cfg)
     state = {k: jnp.asarray(v) for k, v in state_np.items()}
     fn = build_dist_get(mesh, cfg)
@@ -44,7 +44,7 @@ def test_dist_get_shardmap_single_device():
     pos = rng.choice(keys, 64)
     neg = pos + 1
     probes = jnp.asarray(np.concatenate([pos, neg]))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         found, vptr = fn(state, probes)
     found = np.asarray(found)
     assert found[:64].all()

@@ -4,7 +4,10 @@ sweeping shapes/dtypes, plus hypothesis property tests."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: seeded-random fallback (see _hypothesis_shim)
+    from _hypothesis_shim import given, settings, st
 
 from repro.core.bloom import bloom_build_np, bloom_words
 from repro.core.datasets import make_dataset

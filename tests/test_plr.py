@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: seeded-random fallback (see _hypothesis_shim)
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import greedy_plr_np, greedy_plr_jax, plr_predict_np
 from repro.core.datasets import make_dataset

@@ -1,0 +1,455 @@
+"""Durable storage engine: WAL replay, MANIFEST recovery, persisted PLR
+models, crash injection at randomized points, and value-log GC."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import BourbonStore, LSMConfig, StoreConfig
+from repro.core.engine import EngineConfig
+
+
+def small_cfg(**kw):
+    defaults = dict(policy="always", value_size=16,
+                    lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                                  l1_cap_records=1 << 13),
+                    engine=EngineConfig(seg_cap=4096))
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def _values_for(keys: np.ndarray, version: int, value_size: int = 16):
+    v = np.zeros((keys.shape[0], value_size), np.uint8)
+    v[:, 0] = (keys % 251).astype(np.uint8)
+    v[:, 1] = version % 251
+    return v
+
+
+def _check_reads(store, shadow: dict, probes: np.ndarray,
+                 batch: int = 4096) -> None:
+    """Every get_batch result must match the shadow dict (presence and,
+    via fetch_values, the exact payload version)."""
+    store.cfg.fetch_values = True
+    store.cfg.engine.fetch_values = True
+    try:
+        for off in range(0, probes.shape[0], batch):
+            p = probes[off: off + batch]
+            found, vals = store.get_batch(p)
+            for i, k in enumerate(p):
+                ver = shadow.get(int(k))
+                if ver is None:
+                    assert not found[i], f"key {k} found but never live"
+                else:
+                    assert found[i], f"key {k} lost"
+                    assert vals[i, 0] == k % 251
+                    assert vals[i, 1] == ver % 251, \
+                        f"key {k}: stale value version"
+    finally:
+        store.cfg.fetch_values = False
+        store.cfg.engine.fetch_values = False
+
+
+# --------------------------------------------------------------- unit pieces
+
+def test_sstable_file_roundtrip(tmp_path):
+    from repro.core.sstable import build_sstable
+    from repro.storage import append_model, load_sstable, write_sstable
+
+    keys = np.arange(0, 5000, 2, dtype=np.int64)
+    seqs = np.arange(keys.shape[0], dtype=np.int64)
+    vptrs = seqs * 3
+    t = build_sstable(keys, seqs, vptrs, level=2, now=42.0)
+    write_sstable(str(tmp_path), t)
+    r = load_sstable(str(tmp_path / f"{t.file_id:06d}.sst"))
+    np.testing.assert_array_equal(r.keys, t.keys)
+    np.testing.assert_array_equal(r.seqs, t.seqs)
+    np.testing.assert_array_equal(r.vptrs, t.vptrs)
+    np.testing.assert_array_equal(r.fences, t.fences)
+    np.testing.assert_array_equal(r.bloom, t.bloom)
+    assert (r.level, r.file_id, r.created_at) == (2, t.file_id, 42.0)
+    assert r.model is None
+
+    # model appended post hoc (the async-learning path)
+    t.learn(delta=8)
+    append_model(str(tmp_path / f"{t.file_id:06d}.sst"), t.model)
+    r2 = load_sstable(str(tmp_path / f"{t.file_id:06d}.sst"))
+    assert r2.model is not None
+    assert int(r2.model.n_segments) == int(t.model.n_segments)
+    np.testing.assert_allclose(np.asarray(r2.model.slopes),
+                               np.asarray(t.model.slopes)[:int(t.model.n_segments)])
+
+
+def test_wal_roundtrip_and_torn_tail(tmp_path):
+    from repro.storage import WALWriter, replay_wal
+
+    path = str(tmp_path / "wal-000001.log")
+    w = WALWriter(path)
+    rng = np.random.default_rng(0)
+    batches = []
+    for _ in range(5):
+        k = rng.integers(0, 1 << 40, 200).astype(np.int64)
+        s = rng.integers(0, 1 << 30, 200).astype(np.int64)
+        v = rng.integers(-1, 1 << 30, 200).astype(np.int64)
+        w.append(k, s, v)
+        batches.append((k, s, v))
+    w.close()
+    got = replay_wal(path)
+    assert len(got) == 5
+    for (k, s, v), (gk, gs, gv) in zip(batches, got):
+        np.testing.assert_array_equal(k, gk)
+        np.testing.assert_array_equal(s, gs)
+        np.testing.assert_array_equal(v, gv)
+    # torn tail: drop 3 bytes -> the last frame must vanish, rest intact
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) - 3)
+    got = replay_wal(path)
+    assert len(got) == 4
+
+
+def test_manifest_replay(tmp_path):
+    from repro.storage import ManifestWriter, read_manifest
+
+    w = ManifestWriter(str(tmp_path))
+    w.append({"wal": 1})
+    w.append({"add": [[0, 0], [1, 0]], "seq": 100, "clock": 5.0})
+    w.append({"add": [[2, 1]], "del": [0, 1], "wal": 2, "seq": 200})
+    w.append({"vlog_rm": [0, 3], "vhead": 4096})
+    w.close()
+    state, no = read_manifest(str(tmp_path))
+    assert no == 1
+    assert state.live == {2: 1}
+    assert state.wal_no == 2
+    assert state.seq == 200
+    assert state.clock == 5.0
+    assert state.vlog_removed == {0, 3}
+    assert state.vhead == 4096
+
+
+# ------------------------------------------------------------ lifecycle
+
+def test_reopen_roundtrip_with_persisted_models(tmp_path):
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg())
+    rng = np.random.default_rng(3)
+    keys = rng.permutation(np.arange(1, 20001, dtype=np.int64) * 5)
+    shadow = {}
+    for off in range(0, keys.shape[0], 4096):
+        ks = keys[off: off + 4096]
+        st.put_batch(ks, _values_for(ks, 0))
+        for k in ks:
+            shadow[int(k)] = 0
+    st.flush_all()
+    st.learn_all()
+    n_learned = st.stats()["n_learned"]
+    assert n_learned == st.stats()["n_files"]
+    st.close()
+
+    st2 = BourbonStore.open(d, small_cfg())
+    s = st2.stats()
+    # persisted PLR models reload without retraining
+    assert s["n_learned"] == s["n_files"] == n_learned
+    assert s["models_recovered"] == n_learned
+    assert s["files_learned"] == 0
+    assert all(t.model is not None for t in st2.tree.all_files())
+    _check_reads(st2, shadow, keys[:8192])
+    miss, _ = st2.get_batch(keys[:4096] + 1)
+    assert not miss.any()
+    st2.close()
+
+
+def test_crash_recovery_randomized_100k(tmp_path):
+    """The acceptance scenario: >=100k keys with overwrites and deletes,
+    crash (no close) at a randomized point, recover, compare against a
+    shadow dict; persisted models reload with files_learned untouched."""
+    d = str(tmp_path / "db")
+    cfg = small_cfg(lsm=LSMConfig(memtable_cap=1 << 12, file_cap=1 << 13,
+                                  l1_cap_records=1 << 15))
+    st = BourbonStore.open(d, cfg)
+    rng = np.random.default_rng(11)
+    keys = rng.permutation(np.arange(1, 100_001, dtype=np.int64) * 7)
+    shadow = {}
+    for off in range(0, keys.shape[0], 8192):     # load phase (>=100k keys)
+        ks = keys[off: off + 8192]
+        st.put_batch(ks, _values_for(ks, 0))
+        for k in ks:
+            shadow[int(k)] = 0
+    st.flush_all()
+    st.learn_all()
+
+    # mutation phase: overwrite + delete batches, crash at a random point
+    ops = []
+    for ver in (1, 2):
+        for off in range(0, 40_000, 8192):
+            ops.append(("put", keys[off: off + 8192], ver))
+    ops.append(("del", keys[:10_000], None))
+    for off in range(0, 20_000, 8192):
+        ops.append(("put", keys[off: off + 8192], 3))
+    crash_at = int(rng.integers(1, len(ops)))
+    for op, ks, ver in ops[:crash_at]:
+        if op == "put":
+            st.put_batch(ks, _values_for(ks, ver))
+            for k in ks:
+                shadow[int(k)] = ver
+        else:
+            st.delete_batch(ks)
+            for k in ks:
+                shadow.pop(int(k), None)
+    st.learn_all()   # models persisted into the live sstables at crash time
+    del st  # CRASH: no close, memtable contents only in the WAL
+
+    st2 = BourbonStore.open(d, cfg)
+    s = st2.stats()
+    assert s["n_records"] + len(st2.memtable) >= len(shadow)
+    assert s["files_learned"] == 0               # nothing relearned
+    assert s["models_recovered"] == s["n_learned"] == s["n_files"] > 0
+    assert all(t.model is not None for t in st2.tree.all_files())
+    probes = np.concatenate([keys, keys[:4096] + 1])  # all keys + misses
+    _check_reads(st2, shadow, probes)
+    st2.close()
+
+
+def test_torn_wal_tail_drops_only_last_batch(tmp_path):
+    d = str(tmp_path / "db")
+    cfg = small_cfg(policy="never", mode="wisckey")
+    st = BourbonStore.open(d, cfg)
+    a = np.arange(1, 201, dtype=np.int64)
+    b = np.arange(1001, 1101, dtype=np.int64)
+    st.put_batch(a, _values_for(a, 0))
+    st.put_batch(b, _values_for(b, 0))
+    del st  # crash
+    wals = [n for n in os.listdir(d) if n.startswith("wal-")]
+    assert len(wals) == 1
+    path = os.path.join(d, wals[0])
+    with open(path, "r+b") as f:   # tear mid-frame: the b-batch is lost
+        f.truncate(os.path.getsize(path) - 7)
+    st2 = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    fa, _ = st2.get_batch(np.concatenate([a, np.zeros(56, np.int64) + 5000]))
+    assert fa[:200].all()
+    fb, _ = st2.get_batch(np.concatenate([b, np.zeros(156, np.int64) + 5000]))
+    assert not fb.any()            # unacknowledged tail dropped, no error
+    st2.close()
+
+
+def test_repeated_crash_cycles(tmp_path):
+    """Kill the store at randomized points across several sessions; the
+    shadow dict must survive every reopen."""
+    d = str(tmp_path / "db")
+    rng = np.random.default_rng(7)
+    space = np.arange(1, 4001, dtype=np.int64) * 11
+    shadow = {}
+    ver = 0
+    for session in range(4):
+        st = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+        n_batches = int(rng.integers(1, 6))
+        for _ in range(n_batches):
+            ver += 1
+            ks = rng.choice(space, int(rng.integers(100, 1500)), replace=False)
+            if rng.random() < 0.25:
+                st.delete_batch(ks)
+                for k in ks:
+                    shadow.pop(int(k), None)
+            else:
+                st.put_batch(ks, _values_for(ks, ver))
+                for k in ks:
+                    shadow[int(k)] = ver
+        if session % 2 == 0:
+            del st                 # hard crash
+        else:
+            st.close()             # clean shutdown (WAL still replays)
+        st = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+        _check_reads(st, shadow, space)
+        st.close()
+
+
+# ------------------------------------------------------------------ vlog GC
+
+def test_gc_reclaims_dead_bytes_and_keeps_reads_correct(tmp_path):
+    d = str(tmp_path / "db")
+    cfg = small_cfg(policy="never", mode="wisckey", vlog_seg_slots=1 << 10)
+    st = BourbonStore.open(d, cfg)
+    rng = np.random.default_rng(5)
+    keys = rng.permutation(np.arange(1, 8001, dtype=np.int64) * 13)
+    shadow = {}
+    for ver in range(4):           # overwrite-heavy: 4 versions of each key
+        for off in range(0, keys.shape[0], 2048):
+            ks = keys[off: off + 2048]
+            st.put_batch(ks, _values_for(ks, ver))
+            for k in ks:
+                shadow[int(k)] = ver
+    st.delete_batch(keys[:1000])
+    for k in keys[:1000]:
+        shadow.pop(int(k), None)
+    st.flush_all()
+
+    entry = st.vlog.entry_size
+    before = st.vlog.disk_bytes()
+    live_ptrs = st._host_get_vptrs(keys)
+    n_live = int((live_ptrs >= 0).sum())
+    dead_bytes = before - n_live * entry
+    assert dead_bytes > 0
+
+    res = st.gc_value_log(min_dead_ratio=0.3)
+    after = st.vlog.disk_bytes()
+    assert res["segments_removed"] > 0
+    assert before - after >= 0.5 * dead_bytes, \
+        f"reclaimed {before - after} of {dead_bytes} dead bytes"
+    # relocated pointers were routed through the LSM: reads stay exact
+    _check_reads(st, shadow, keys)
+    st.close()
+
+    # ... and survive a reopen (GC edits are in the MANIFEST)
+    st2 = BourbonStore.open(d, cfg)
+    _check_reads(st2, shadow, keys)
+    assert st2.vlog.removed == st.vlog.removed
+    st2.close()
+
+
+def test_gc_requires_durable_store():
+    st = BourbonStore(small_cfg())
+    with pytest.raises(RuntimeError):
+        st.gc_value_log()
+
+
+def test_manifest_torn_tail_then_new_session_survives(tmp_path):
+    """Edits appended after a crash-torn manifest frame must stay visible:
+    the writer truncates the torn tail before appending."""
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    a = np.arange(1, 3001, dtype=np.int64)
+    st.put_batch(a, _values_for(a, 0))
+    st.flush_all()
+    st.close()
+    mpath = [os.path.join(d, n) for n in os.listdir(d)
+             if n.startswith("MANIFEST")][0]
+    with open(mpath, "ab") as f:        # crash-torn partial frame
+        f.write(b"\x13\x37torn-frame-garbage")
+    # second session writes + flushes through the damaged manifest
+    st2 = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    b = np.arange(10_001, 13_001, dtype=np.int64)
+    st2.put_batch(b, _values_for(b, 1))
+    st2.flush_all()
+    st2.close()
+    # third session must see BOTH sessions' data
+    st3 = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    fa, _ = st3.get_batch(a)
+    fb, _ = st3.get_batch(b)
+    assert fa.all() and fb.all()
+    st3.close()
+
+
+def test_gc_at_exact_segment_boundary(tmp_path):
+    """Head exactly on a segment boundary: the last-written segment is
+    sealed and must be collectable without error."""
+    d = str(tmp_path / "db")
+    cfg = small_cfg(policy="never", mode="wisckey", vlog_seg_slots=1 << 10)
+    st = BourbonStore.open(d, cfg)
+    ks = np.arange(1, 2049, dtype=np.int64)     # exactly 2 segments of values
+    st.put_batch(ks, _values_for(ks, 0))
+    assert len(st.vlog) % (1 << 10) == 0
+    st.delete_batch(ks)                          # everything dead
+    st.flush_all()
+    res = st.gc_value_log(min_dead_ratio=0.3)
+    assert res["segments_removed"] == 2
+    found, _ = st.get_batch(ks)
+    assert not found.any()
+    # the log keeps working after the boundary drop
+    st.put_batch(ks[:100], _values_for(ks[:100], 1))
+    found, _ = st.get_batch(ks[:100])
+    assert found.all()
+    st.close()
+
+
+def test_reopen_with_wrong_vlog_geometry_refused(tmp_path):
+    """Parsing segment files with a different entry size would destroy
+    them; the manifest records the geometry and open() validates it."""
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    ks = np.arange(1, 2001, dtype=np.int64)
+    st.put_batch(ks, _values_for(ks, 0))
+    st.close()
+    with pytest.raises(ValueError, match="value_size"):
+        BourbonStore.open(d, small_cfg(policy="never", mode="wisckey",
+                                       value_size=64))
+    with pytest.raises(ValueError, match="value_size"):
+        BourbonStore.open(d, small_cfg(policy="never", mode="wisckey",
+                                       vlog_seg_slots=1 << 8))
+    # a smaller plr_delta would shrink the model search window below the
+    # persisted models' error bound -> silent read loss; must be refused
+    with pytest.raises(ValueError, match="plr_delta"):
+        BourbonStore.open(d, small_cfg(
+            policy="never", mode="wisckey",
+            lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                          l1_cap_records=1 << 13, plr_delta=2)))
+    # the refused opens must not have damaged anything
+    st2 = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    f, _ = st2.get_batch(ks)
+    assert f.all()
+    st2.close()
+
+
+def test_second_open_of_live_store_refused(tmp_path):
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    st.put_batch(np.arange(1, 101, dtype=np.int64))
+    with pytest.raises(RuntimeError, match="already open"):
+        BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    st.close()
+    # released on close
+    st2 = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    st2.close()
+
+
+def test_level_granularity_relearns_after_reopen(tmp_path):
+    """Level models aren't persisted; a reopened level-granularity store
+    must resubmit the learning jobs rather than serve baseline forever."""
+    d = str(tmp_path / "db")
+    cfg = small_cfg(granularity="level", policy="always")
+    st = BourbonStore.open(d, cfg)
+    ks = np.arange(1, 20001, dtype=np.int64) * 3
+    st.put_batch(ks, _values_for(ks, 0))
+    st.flush_all()
+    st.close()
+    st2 = BourbonStore.open(d, small_cfg(granularity="level",
+                                         policy="always"))
+    assert any(st2.tree.levels[i] for i in range(1, 7))
+    st2.drain_learning()
+    assert any(m is not None for m in st2.level_models)
+    f, _ = st2.get_batch(ks[:4096])
+    assert f.all()
+    st2.close()
+
+
+def test_writes_after_close_rejected(tmp_path):
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    ks = np.arange(1, 101, dtype=np.int64)
+    st.put_batch(ks, _values_for(ks, 0))
+    st.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        st.put_batch(ks, _values_for(ks, 1))
+    with pytest.raises(RuntimeError, match="closed"):
+        st.delete_batch(ks)
+    with pytest.raises(RuntimeError, match="closed"):
+        st.gc_value_log()
+
+
+def test_unreferenced_sstable_swept_on_recovery(tmp_path):
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    ks = np.arange(1, 3001, dtype=np.int64)
+    st.put_batch(ks, _values_for(ks, 0))
+    st.flush_all()
+    st.close()
+    # simulate a crash between file write and manifest edit
+    orphan = os.path.join(d, "099999.sst")
+    live = [n for n in os.listdir(d) if n.endswith(".sst")][0]
+    with open(os.path.join(d, live), "rb") as f:
+        data = f.read()
+    with open(orphan, "wb") as f:
+        f.write(data)
+    st2 = BourbonStore.open(d, small_cfg(policy="never", mode="wisckey"))
+    assert not os.path.exists(orphan)
+    f_, _ = st2.get_batch(np.concatenate([ks, ks[-1:] + 999]))
+    assert f_[:-1].all() and not f_[-1]
+    st2.close()

@@ -1,0 +1,73 @@
+"""ValueLog edge cases the GC path relies on: out-of-range/tombstone
+pointers, device-view invalidation across growth, and tombstone shadowing
+through the store."""
+
+import numpy as np
+
+from repro.core import BourbonStore, LSMConfig, StoreConfig
+from repro.core.valuelog import ValueLog
+
+
+def test_get_batch_np_out_of_range_and_negative():
+    vl = ValueLog(value_size=8, capacity=16)
+    vals = np.full((4, 8), 7, np.uint8)
+    ptrs = vl.append_batch(vals)
+    np.testing.assert_array_equal(ptrs, [0, 1, 2, 3])
+    probe = np.array([-1, 0, 3, 4, 1 << 40], np.int64)  # tombstone, ok, ok,
+    out = vl.get_batch_np(probe)                        # past head, absurd
+    assert (out[0] == 0).all()       # negative (tombstone) -> zeros
+    assert (out[1] == 7).all()
+    assert (out[2] == 7).all()
+    assert (out[3] == 0).all()       # >= head -> zeros, no wraparound read
+    assert (out[4] == 0).all()
+    # the clamp must not have written through to live slots
+    assert (vl.get_batch_np(np.array([0], np.int64)) == 7).all()
+
+
+def test_device_view_tracks_growth():
+    vl = ValueLog(value_size=4, capacity=4)   # tiny: force arena doubling
+    a = vl.append_batch(np.full((3, 4), 1, np.uint8))
+    dv1 = vl.device_view()
+    assert dv1.shape == (3, 4)
+    b = vl.append_batch(np.full((6, 4), 2, np.uint8))   # grows past capacity
+    dv2 = vl.device_view()                              # must be invalidated
+    assert dv2.shape == (9, 4)
+    assert (np.asarray(dv2)[np.asarray(a)] == 1).all()
+    assert (np.asarray(dv2)[np.asarray(b)] == 2).all()
+    # stale view object unchanged (functional), fresh view has the appends
+    assert dv1.shape == (3, 4)
+
+
+def test_append_kv_matches_append_batch():
+    vl = ValueLog(value_size=4)
+    k = np.arange(5, dtype=np.int64)
+    s = np.arange(5, dtype=np.int64)
+    v = np.full((5, 4), 9, np.uint8)
+    ptrs = vl.append_kv(k, s, v)
+    np.testing.assert_array_equal(ptrs, np.arange(5))
+    assert (vl.get_batch_np(ptrs) == 9).all()
+
+
+def test_store_delete_batch_tombstone_shadowing():
+    cfg = StoreConfig(mode="wisckey", policy="never", value_size=8,
+                      lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                                    l1_cap_records=1 << 13))
+    st = BourbonStore(cfg)
+    keys = np.arange(1, 2001, dtype=np.int64) * 3
+    st.put_batch(keys)
+    st.delete_batch(keys[:500])
+    st.flush_all()                       # tombstones flushed over the puts
+    found, vptr = st.get_batch(keys)
+    assert not found[:500].any()         # tombstone shadows older version
+    assert found[500:].all()
+    assert (vptr[:500] == -1).all()      # reported vptr is the tombstone
+    # deleting again (already-dead keys) stays not-found
+    st.delete_batch(keys[:100])
+    st.flush_all()
+    found, _ = st.get_batch(keys[:500])
+    assert not found.any()
+    # re-put resurrects with a fresh value pointer
+    st.put_batch(keys[:250])
+    found, vptr = st.get_batch(keys[:500])
+    assert found[:250].all() and not found[250:].any()
+    assert (vptr[:250] >= 0).all()
