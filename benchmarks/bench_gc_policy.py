@@ -1,0 +1,96 @@
+"""GC policy benchmark: manual vs CBA-scheduled value-log GC under a
+sustained-overwrite YCSB-style load (update-heavy, zipfian-ish key reuse).
+
+Three stores see the identical write stream:
+
+* ``none``   — GC disabled (growth baseline),
+* ``manual`` — operator-driven: one big gc_value_log() at the end,
+* ``auto``   — the MaintenanceScheduler collects segments whenever their
+               estimated reclaim benefit beats relocation cost.
+
+Reported per policy: peak and final vlog disk bytes, entries relocated,
+real GC wall time, and post-load lookup latency — the LearnedKV-style
+argument that *scheduled* maintenance keeps space bounded without a
+stop-the-world pass.  ``REPRO_BENCH_SMOKE=1`` shrinks the load so CI can
+execute the scheduler path in seconds.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, time_lookups
+from repro.core import LSMConfig, MaintenanceConfig, StoreConfig, BourbonStore
+from repro.core.engine import EngineConfig
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+N_KEYS = (1 << 12) if SMOKE else (1 << 15)
+ROUNDS = 4 if SMOKE else 8
+BATCH = 1 << 10
+
+
+def _cfg(maint: MaintenanceConfig) -> StoreConfig:
+    return StoreConfig(mode="wisckey", policy="never", value_size=16,
+                       vlog_seg_slots=1 << 10, maintenance=maint,
+                       lsm=LSMConfig(memtable_cap=1 << 12, file_cap=1 << 13,
+                                     l1_cap_records=1 << 15),
+                       engine=EngineConfig(seg_cap=4096))
+
+
+def _run_policy(name: str, maint: MaintenanceConfig, manual_gc: bool,
+                keys: np.ndarray, order: np.ndarray) -> None:
+    d = tempfile.mkdtemp(prefix=f"bourbon_gc_{name}_")
+    try:
+        st = BourbonStore.open(d, _cfg(maint))
+        peak = 0
+        t0 = time.perf_counter()
+        for r in range(ROUNDS):
+            hot = keys[order[r % order.shape[0]]]
+            for off in range(0, hot.shape[0], BATCH):
+                st.put_batch(hot[off: off + BATCH])
+            peak = max(peak, st.vlog.disk_bytes())
+        st.flush_all()
+        load_us = (time.perf_counter() - t0) * 1e6
+        gc_us = 0.0
+        moved = 0
+        if manual_gc:
+            t0 = time.perf_counter()
+            res = st.gc_value_log(min_dead_ratio=0.3)
+            gc_us = (time.perf_counter() - t0) * 1e6
+            moved = res["entries_moved"]
+        s = st.stats()
+        if not manual_gc:
+            moved = s["auto_gc"]["entries_moved"]
+        peak = max(peak, s["vlog_disk_bytes"])
+        probes = np.random.default_rng(2).choice(keys, 1 << 13)
+        emit(f"gc/{name}.load", load_us / (ROUNDS * keys.shape[0]),
+             f"final_bytes={s['vlog_disk_bytes']} peak_bytes={peak} "
+             f"moved={moved} auto_runs={s['auto_gc']['runs']} "
+             f"checkpoints={s['manifest_checkpoints']}")
+        emit(f"gc/{name}.gc_pass", gc_us,
+             f"segments_removed={s['vlog_segments_removed']}")
+        emit(f"gc/{name}.lookup_after", time_lookups(st, probes))
+        st.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def run() -> None:
+    rng = np.random.default_rng(1)
+    keys = rng.permutation(np.arange(1, N_KEYS + 1, dtype=np.int64) * 7)
+    # update-heavy reuse: each round rewrites a (biased) permutation of
+    # the working set, so old versions pile up in sealed segments
+    order = np.stack([rng.permutation(N_KEYS) for _ in range(4)])
+    _run_policy("none", MaintenanceConfig(auto_gc=False,
+                                          auto_checkpoint=False),
+                manual_gc=False, keys=keys, order=order)
+    _run_policy("manual", MaintenanceConfig(auto_gc=False,
+                                            auto_checkpoint=False),
+                manual_gc=True, keys=keys, order=order)
+    _run_policy("auto", MaintenanceConfig(), manual_gc=False,
+                keys=keys, order=order)

@@ -17,15 +17,20 @@ import time
 import numpy as np
 
 from benchmarks.common import N_KEYS, emit, time_lookups
-from repro.core import BourbonStore, LSMConfig, StoreConfig, make_dataset
+from repro.core import (BourbonStore, LSMConfig, MaintenanceConfig,
+                        StoreConfig, make_dataset)
 from repro.core.engine import EngineConfig
 
 
 def _durable_cfg() -> StoreConfig:
+    # auto maintenance off: this suite measures the *manual* GC pass
+    # (bench_gc_policy covers the CBA-scheduled path)
     return StoreConfig(mode="bourbon", policy="always",
                        lsm=LSMConfig(memtable_cap=1 << 13, file_cap=1 << 14,
                                      l1_cap_records=1 << 16),
-                       engine=EngineConfig(seg_cap=4096), value_size=16)
+                       engine=EngineConfig(seg_cap=4096), value_size=16,
+                       maintenance=MaintenanceConfig(auto_gc=False,
+                                                     auto_checkpoint=False))
 
 
 def run() -> None:

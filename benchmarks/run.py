@@ -24,6 +24,9 @@ SUITES = {
     "recovery": ("bench_recovery",
                  "durable engine: reopen w/ persisted models vs relearn; "
                  "value-log GC"),
+    "gc": ("bench_gc_policy",
+           "manual vs CBA-scheduled value-log GC under sustained "
+           "overwrites"),
 }
 
 

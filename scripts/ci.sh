@@ -8,3 +8,8 @@ python -m pip install -r requirements-dev.txt || \
     echo "WARN: pip install failed (offline?) — continuing with baked-in deps"
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+# exercise the maintenance-scheduler path end to end (auto value-log GC +
+# MANIFEST checkpointing) on a shrunk load
+REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run gc

@@ -15,6 +15,11 @@ priority queue on (B_model - C_model).
 The learning executor is a discrete-event simulation over the store's virtual
 clock with a configurable number of learner "threads" (slots); model fitting
 itself (Greedy-PLR) runs for real on the host.
+
+:class:`MaintenanceScheduler` extends the same discipline from "when to
+learn" to "when to GC the value log" and "when to checkpoint the MANIFEST":
+background work runs only when an explicit cost-benefit model says it pays
+off, with the same T_wait ski-rental framing per sealed segment.
 """
 
 from __future__ import annotations
@@ -27,7 +32,8 @@ from .clock import CostModel
 from .lsm import LSMTree
 from .sstable import SSTable
 
-__all__ = ["CBAConfig", "CostBenefitAnalyzer", "LevelStats", "LearningExecutor"]
+__all__ = ["CBAConfig", "CostBenefitAnalyzer", "LevelStats",
+           "LearningExecutor", "MaintenanceConfig", "MaintenanceScheduler"]
 
 
 @dataclasses.dataclass
@@ -115,6 +121,121 @@ class CostBenefitAnalyzer:
         return False, 0.0
 
 
+@dataclasses.dataclass
+class MaintenanceConfig:
+    """Knobs for CBA-scheduled background maintenance (durable stores)."""
+    auto_gc: bool = True             # schedule value-log GC from _tick
+    gc_dead_ratio: float = 0.3       # candidacy watermark (estimated)
+    gc_t_wait_us: float | None = None  # None -> worst-case collect cost
+    gc_max_segments_per_tick: int = 4
+    gc_scan_interval_us: float = 256.0  # min virtual time between scans
+    auto_checkpoint: bool = True     # fold the MANIFEST once it grows
+    checkpoint_bytes: int = 1 << 16  # edit-log size triggering compaction
+
+
+class MaintenanceScheduler(CostBenefitAnalyzer):
+    """CBA for maintenance: GC a sealed value-log segment iff
+
+        B_gc > C_gc
+        C_gc = scan cost (all entries) + relocation cost (live entries)
+        B_gc = reclaimed dead bytes * avoided-amplification rate
+
+    using the incremental per-segment dead estimates (ValueLog.note_dead)
+    instead of a full-log scan, gated by a dead-ratio watermark and a
+    per-segment T_wait (2-competitive ski-rental, as for learning: never
+    wait longer than the work itself would have cost).  Also decides when
+    the MANIFEST edit log is worth folding into a checkpoint.
+    """
+
+    def __init__(self, cfg: CBAConfig, costs: CostModel,
+                 mcfg: MaintenanceConfig | None = None) -> None:
+        super().__init__(cfg, costs)
+        self.mcfg = mcfg if mcfg is not None else MaintenanceConfig()
+        self.sealed_at: dict[int, float] = {}   # seg -> first-seen-sealed
+        # decision counters are per segment-state transition, not per tick
+        # (gc_candidates runs every tick; recounting would just measure
+        # tick frequency)
+        self._last_decision: dict[int, str] = {}
+        self.gc_decisions = {"collected": 0, "skipped": 0, "waiting": 0}
+        # scan gating: candidacy only changes when dead counts move, a new
+        # segment seals, or a T_wait expires — ticks between those events
+        # (and within the min scan interval) skip the per-segment loop
+        self._seen_dead_version = -1
+        self._seen_sealed = -1
+        self._next_expiry = 0.0
+        self._next_scan_at = 0.0
+        self.gc_runs = 0
+        self.gc_us = 0.0            # virtual time spent collecting
+        self.checkpoints = 0
+        self.checkpoint_us = 0.0
+
+    def gc_t_wait(self, seg_slots: int) -> float:
+        if self.mcfg.gc_t_wait_us is not None:
+            return self.mcfg.gc_t_wait_us
+        # worst case: scanning + relocating a fully-live segment
+        return self.costs.t_gc(seg_slots, seg_slots)
+
+    def gc_cost(self, n_entries: int, n_dead: int) -> float:
+        return self.costs.t_gc(n_entries, max(0, n_entries - n_dead))
+
+    def gc_benefit(self, n_dead: int, entry_size: int) -> float:
+        return self.costs.b_gc(n_dead * entry_size)
+
+    def gc_candidates(self, vlog, now: float) -> list[int]:
+        """Profitable sealed segments, best (B - C) first, capped at
+        ``gc_max_segments_per_tick``.  Pure estimate — no file I/O, and
+        the per-segment loop runs only when something could have changed."""
+        n_sealed = len(vlog) // vlog.seg_slots
+        changed = (vlog.dead_version != self._seen_dead_version
+                   or n_sealed != self._seen_sealed
+                   or now >= self._next_expiry)
+        if not changed or now < self._next_scan_at:
+            return []
+        self._seen_dead_version = vlog.dead_version
+        self._seen_sealed = n_sealed
+        self._next_scan_at = now + self.mcfg.gc_scan_interval_us
+        self._next_expiry = float("inf")
+        t_wait = self.gc_t_wait(vlog.seg_slots)
+        scored: list[tuple[float, int]] = []
+        for seg in vlog.sealed_segments():
+            sealed = self.sealed_at.setdefault(seg, now)
+            if now < sealed + t_wait:
+                self._next_expiry = min(self._next_expiry, sealed + t_wait)
+                self._count(seg, "waiting")
+                continue
+            n_dead = vlog.dead_by_seg.get(seg, 0)
+            if vlog.dead_ratio_est(seg) < self.mcfg.gc_dead_ratio:
+                self._count(seg, "skipped")
+                continue
+            b = self.gc_benefit(n_dead, vlog.entry_size)
+            c = self.gc_cost(vlog.seg_slots, n_dead)
+            if b <= c:
+                self._count(seg, "skipped")
+                continue
+            scored.append((b - c, seg))
+        scored.sort(reverse=True)
+        picked = [seg for _, seg in
+                  scored[: self.mcfg.gc_max_segments_per_tick]]
+        for seg in picked:
+            self._last_decision.pop(seg, None)
+        self.gc_decisions["collected"] += len(picked)
+        return picked
+
+    def _count(self, seg: int, decision: str) -> None:
+        if self._last_decision.get(seg) != decision:
+            self._last_decision[seg] = decision
+            self.gc_decisions[decision] += 1
+
+    def forget_segment(self, seg: int) -> None:
+        """A segment was reclaimed: drop its scheduling bookkeeping."""
+        self.sealed_at.pop(seg, None)
+        self._last_decision.pop(seg, None)
+
+    def should_checkpoint(self, manifest_bytes: int) -> bool:
+        return (self.mcfg.auto_checkpoint
+                and manifest_bytes > self.mcfg.checkpoint_bytes)
+
+
 @dataclasses.dataclass(order=True)
 class _Job:
     neg_priority: float
@@ -145,6 +266,7 @@ class LearningExecutor:
         self.queue: list[_Job] = []
         self.running: list[tuple[float, _Job]] = []  # (finish_at, job)
         self.learn_time_us = 0.0      # total virtual time spent learning
+        self.jobs_done = 0            # jobs that left the pipeline
         self.files_learned = 0
         self.level_attempts = 0
         self.level_failures = 0
@@ -179,6 +301,7 @@ class LearningExecutor:
             if finish_at > now:
                 still.append((finish_at, job))
                 continue
+            self.jobs_done += 1
             if job.is_level:
                 if tree.level_version[job.level] != job.level_version:
                     self.level_failures += 1   # level changed mid-learn
@@ -196,11 +319,13 @@ class LearningExecutor:
             if not job.is_level:
                 t = job.table
                 if t.deleted_at is not None or t.model is not None:
+                    self.jobs_done += 1   # drained without running
                     continue
                 dur = self.costs.t_build(t.n)
             else:
                 if tree.level_version[job.level] != job.level_version:
                     self.level_failures += 1
+                    self.jobs_done += 1
                     continue
                 dur = self.costs.t_build(tree.level_records(job.level))
             self.learn_time_us += dur

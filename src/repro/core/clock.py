@@ -34,9 +34,27 @@ class CostModel:
     t_put: float = 1.0     # per-record insert cost
     learn_per_key: float = 0.23   # Greedy-PLR per key (us): 40ms per ~175k-record file (paper §4.4.1)
     compact_per_key: float = 0.15  # merge cost per key (us)
+    # value-log GC terms (§4.4 framing applied to maintenance):
+    # collecting a segment costs a liveness probe per entry plus a
+    # relocation (append + LSM re-insert) per *live* entry; the benefit of
+    # reclaiming a dead byte is the avoided read/space amplification,
+    # calibrated against the same virtual regime as the lookup terms.
+    gc_scan_per_entry: float = 0.4    # liveness check per sealed entry (us)
+    gc_move_per_entry: float = 2.0    # relocate one live entry (us)
+    gc_benefit_per_dead_byte: float = 0.1   # avoided amplification (us/B)
+    checkpoint_per_byte: float = 0.001  # MANIFEST rewrite cost (us/B)
 
     def t_build(self, n_keys: int) -> float:
         return self.learn_per_key * n_keys
+
+    def t_gc(self, n_entries: int, n_live: int) -> float:
+        """Virtual cost of collecting one segment (scan + relocation)."""
+        return (self.gc_scan_per_entry * n_entries
+                + self.gc_move_per_entry * n_live)
+
+    def b_gc(self, dead_bytes: int) -> float:
+        """Virtual benefit of reclaiming ``dead_bytes`` from the log."""
+        return self.gc_benefit_per_dead_byte * dead_bytes
 
 
 class VirtualClock:

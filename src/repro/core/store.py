@@ -23,7 +23,8 @@ import dataclasses
 
 import numpy as np
 
-from .cba import CBAConfig, CostBenefitAnalyzer, LearningExecutor
+from .cba import (CBAConfig, CostBenefitAnalyzer, LearningExecutor,
+                  MaintenanceConfig, MaintenanceScheduler)
 from .clock import CostModel, VirtualClock
 from .engine import EngineConfig, LookupEngine, LookupResult
 from .lsm import LSMConfig, LSMTree, N_LEVELS
@@ -48,6 +49,8 @@ class StoreConfig:
     engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
     cba: CBAConfig = dataclasses.field(default_factory=CBAConfig)
     costs: CostModel = dataclasses.field(default_factory=CostModel)
+    maintenance: MaintenanceConfig = dataclasses.field(
+        default_factory=MaintenanceConfig)
     value_size: int = 64
     fetch_values: bool = False
     # durability (repro.storage): None = in-memory store (seed behavior)
@@ -73,7 +76,7 @@ class BourbonStore:
         self.vlog = ValueLog(cfg.value_size) if cfg.storage_dir is None \
             else None
         self.engine = LookupEngine(cfg.engine)
-        self.cba = CostBenefitAnalyzer(cfg.cba, cfg.costs)
+        self.cba = MaintenanceScheduler(cfg.cba, cfg.costs, cfg.maintenance)
         self.executor = LearningExecutor(self.cba, cfg.costs,
                                          cfg.cba.learner_slots,
                                          cfg.lsm.plr_delta, cfg.engine.seg_cap)
@@ -94,6 +97,10 @@ class BourbonStore:
         self._events_persisted = 0
         self._models_swept_at = 0
         self.models_recovered = 0
+        # CBA-scheduled maintenance (auto value-log GC + checkpointing)
+        self._in_maintenance = False
+        self.auto_gc_stats = {"runs": 0, "segments_removed": 0,
+                              "bytes_reclaimed": 0, "entries_moved": 0}
         if cfg.storage_dir is not None:
             self._attach_storage(cfg.storage_dir)
 
@@ -148,7 +155,8 @@ class BourbonStore:
         self.models_recovered = len(eng.persisted_models)
         self.vlog = durable_vlog_cls.open(
             eng.dir, self.cfg.value_size, self.cfg.vlog_seg_slots,
-            state.vlog_removed, state.vhead, fsync=self.cfg.fsync)
+            state.vlog_removed, state.vhead, fsync=self.cfg.fsync,
+            dead_by_seg=state.vlog_dead)
         self.clock.advance(state.clock)
         self._seq = state.seq
         for keys, seqs, vptrs in eng.replay_old_wal():
@@ -186,7 +194,8 @@ class BourbonStore:
         if self._storage is None:
             return
         self.vlog.close()
-        self._storage.close(self._seq, self.clock.now, len(self.vlog))
+        self._storage.close(self._seq, self.clock.now, len(self.vlog),
+                            vdead=self.vlog.dead_delta())
         self._storage = None
         self._closed = True  # a closed durable store must not accept writes
 
@@ -206,6 +215,8 @@ class BourbonStore:
         seqs = np.arange(self._seq, self._seq + b, dtype=np.int64)
         self._seq += b
         vptrs = self.vlog.append_kv(keys, seqs, values)
+        if self._storage is not None:   # before ingest: pre-write versions
+            self._note_superseded(keys, vptrs)
         self._ingest(keys, seqs, vptrs)
         self.n_puts += b
         self.foreground_us += self.cfg.costs.t_put * b
@@ -219,9 +230,27 @@ class BourbonStore:
         seqs = np.arange(self._seq, self._seq + b, dtype=np.int64)
         self._seq += b
         vptrs = np.full(b, -1, np.int64)  # tombstones
+        if self._storage is not None:
+            self._note_superseded(keys, None)
         self._ingest(keys, seqs, vptrs)
         self.clock.advance(self.cfg.costs.t_put * b)
         self._tick()
+
+    def _note_superseded(self, keys: np.ndarray,
+                         new_vptrs: np.ndarray | None) -> None:
+        """Write-path half of the dead-entry estimate: every overwrite or
+        delete retires the key's previous value-log slot, and duplicate
+        keys within one batch retire all but the batch's last slot.  The
+        per-segment counters this feeds (ValueLog.note_dead) are what lets
+        GC candidacy skip the full-log scan."""
+        uniq = np.unique(keys)
+        old = self._host_get_vptrs(uniq)
+        self.vlog.note_dead(old[old >= 0])
+        if new_vptrs is not None and uniq.shape[0] < keys.shape[0]:
+            order = np.lexsort((np.arange(keys.shape[0]), keys))
+            ks = keys[order]
+            dup = np.r_[ks[1:] == ks[:-1], False]  # non-last occurrences
+            self.vlog.note_dead(new_vptrs[order][dup])
 
     def _ingest(self, keys: np.ndarray, seqs: np.ndarray,
                 vptrs: np.ndarray) -> None:
@@ -270,10 +299,12 @@ class BourbonStore:
         add_tables = [live_by_id[fid] for fid in created
                       if fid in live_by_id]
         self._storage.persist_flush(add_tables, sorted(deleted), self._seq,
-                                    self.clock.now, len(self.vlog))
+                                    self.clock.now, len(self.vlog),
+                                    vdead=self.vlog.dead_delta())
         # only after the commit landed: a transient I/O error above must
         # leave these events pending, not silently dropped
         self._events_persisted = len(self.tree.events)
+        self.vlog.clear_dead_dirty()
 
     def _after_structure_change(self) -> None:
         # drain dead files into CBA stats
@@ -297,6 +328,7 @@ class BourbonStore:
         if self.cfg.mode != "bourbon" or self.cfg.policy in ("offline", "never"):
             # offline/never: no online learning
             self.executor.tick(self.tree, self.clock.now, self.level_models)
+            self._maintenance_tick()
             return
         if self.cfg.granularity == "file":
             t_wait = self.cba.t_wait(self.cfg.lsm.file_cap)
@@ -314,6 +346,37 @@ class BourbonStore:
                 and self.executor.files_learned != self._models_swept_at):
             self._models_swept_at = self.executor.files_learned
             self._persist_new_models()
+        self._maintenance_tick()
+
+    def _maintenance_tick(self) -> None:
+        """CBA-scheduled maintenance (§4.4 extended): run value-log GC on
+        segments whose estimated reclaim benefit exceeds the relocation
+        cost, and fold the MANIFEST once its edit log is worth rewriting.
+        Both charge the virtual clock like any other background work."""
+        if self._storage is None or self._in_maintenance or self._closed:
+            return
+        m = self.cfg.maintenance
+        self._in_maintenance = True
+        try:
+            if m.auto_gc:
+                segs = self.cba.gc_candidates(self.vlog, self.clock.now)
+                if segs:
+                    res = self.gc_value_log(min_dead_ratio=0.0,
+                                            segments=segs)
+                    self.cba.gc_runs += 1
+                    self.auto_gc_stats["runs"] += 1
+                    for k in ("segments_removed", "bytes_reclaimed",
+                              "entries_moved"):
+                        self.auto_gc_stats[k] += res[k]
+            if (not self._storage.in_recovery and self.cba.should_checkpoint(
+                    self._storage.manifest_tail_bytes())):
+                folded = self._storage.checkpoint()
+                cost = self.cfg.costs.checkpoint_per_byte * folded
+                self.cba.checkpoints += 1
+                self.cba.checkpoint_us += cost
+                self.clock.advance(cost)
+        finally:
+            self._in_maintenance = False
 
     def _persist_new_models(self) -> None:
         """Append just-learned PLR models into their sstable files."""
@@ -327,7 +390,10 @@ class BourbonStore:
             return "baseline"
         if self.cfg.granularity == "level":
             return "level"
-        if all(t.model is not None for t in self.tree.all_files()):
+        files = list(self.tree.all_files())
+        # an empty tree must not claim model_pure (vacuous all()): the
+        # mixed path stays correct for whatever flushes next
+        if files and all(t.model is not None for t in files):
             return "model_pure"   # skip the dead baseline arm
         return "model"
 
@@ -483,11 +549,17 @@ class BourbonStore:
         return best_vp
 
     def gc_value_log(self, min_dead_ratio: float = 0.3,
-                     max_segments: int | None = None) -> dict:
+                     max_segments: int | None = None,
+                     segments: list[int] | None = None) -> dict:
         """WiscKey value-log GC (§2.2): scan sealed segments, relocate live
         entries to the head (updating their pointers through the LSM via a
         fresh-seq put), and delete segments whose dead ratio exceeds the
-        threshold.  Returns reclamation stats."""
+        threshold.  Returns reclamation stats.
+
+        ``segments`` restricts the scan to an explicit candidate list (the
+        MaintenanceScheduler passes the segments its dead-entry estimates
+        deemed profitable, so the auto path never scans the whole log);
+        liveness is still verified per entry before anything is dropped."""
         self._check_writable()
         if self._storage is None:
             raise RuntimeError("value-log GC requires a durable store "
@@ -495,6 +567,7 @@ class BourbonStore:
         removed: list[int] = []
         moved = 0
         reclaimed = 0
+        scanned = 0
         # Liveness is checked in chunks of segments with one batched
         # full-LSM scan per chunk (a per-segment scan would make GC
         # quadratic in store size), and chunking keeps max_segments from
@@ -502,7 +575,11 @@ class BourbonStore:
         # through its loop: a key's sealed entry only changes liveness when
         # its own segment is relocated, and relocated entries land in
         # unsealed head segments.
-        sealed = self.vlog.sealed_segments()
+        if segments is None:
+            sealed = self.vlog.sealed_segments()
+        else:
+            ok = set(self.vlog.sealed_segments())
+            sealed = [s for s in segments if s in ok]
         chunk_size = 64
         done = False
         for start in range(0, len(sealed), chunk_size):
@@ -515,6 +592,7 @@ class BourbonStore:
                 seg_meta.append((seg, ptrs, keys))
             cur = self._host_get_vptrs(
                 np.concatenate([m[2] for m in seg_meta]))
+            scanned += int(cur.shape[0])
             off = 0
             for seg, ptrs, keys in seg_meta:
                 live = cur[off: off + ptrs.shape[0]] == ptrs
@@ -541,27 +619,58 @@ class BourbonStore:
                 # a removed-but-present file, which recovery cleans up; the
                 # other order would leave a missing file the log references
                 self._storage.persist_gc([seg], self._seq, self.clock.now,
-                                         len(self.vlog))
+                                         len(self.vlog),
+                                         vdead=self.vlog.dead_delta())
+                self.vlog.clear_dead_dirty()
                 reclaimed += self.vlog.drop_segment(seg)
+                self.cba.forget_segment(seg)
                 removed.append(seg)
+        # charge the collection to the virtual clock (background work,
+        # same accounting discipline as learning)
+        gc_us = (self.cfg.costs.gc_scan_per_entry * scanned
+                 + self.cfg.costs.gc_move_per_entry * moved)
+        self.cba.gc_us += gc_us
+        self.clock.advance(gc_us)
         return {"segments_removed": len(removed),
                 "bytes_reclaimed": reclaimed,
                 "entries_moved": moved}
 
-    def drain_learning(self, max_us: float = 1e12) -> None:
-        """Advance virtual time until the learning queue is empty."""
-        guard = 0
-        while (self.executor.queue or self.executor.running) and guard < 10000:
-            self.clock.advance(1000.0)
+    def drain_learning(self, max_us: float = 1e12) -> int:
+        """Advance virtual time until the learning queue is empty; returns
+        the number of jobs drained.  Raises instead of giving up silently:
+        a caller that proceeds with jobs still queued would silently
+        benchmark the baseline path."""
+        done0 = self.executor.jobs_done
+        start = self.clock.now
+        while self.executor.queue or self.executor.running:
+            if self.executor.running:
+                # event-driven: jump straight to the next job completion
+                # (a fixed step would need ~duration/step iterations)
+                nxt = min(finish for finish, _ in self.executor.running)
+                step = max(nxt - self.clock.now, 0.0)
+            else:
+                step = 1000.0   # queued-only: let the next tick start them
+            if (self.clock.now + step) - start > max_us:
+                outstanding = (len(self.executor.queue)
+                               + len(self.executor.running))
+                raise RuntimeError(
+                    f"drain_learning: {outstanding} jobs still outstanding; "
+                    f"draining needs more than max_us={max_us:.0f} virtual "
+                    f"us")
+            self.clock.advance(step)
             self._tick()
-            guard += 1
+        return self.executor.jobs_done - done0
 
     # ------------------------------------------------------------------ stats
     def stats(self) -> dict:
         files = list(self.tree.all_files())
         n_learned = sum(1 for t in files if t.model is not None)
         model_bytes = sum(t.model.nbytes for t in files if t.model is not None)
-        data_bytes = sum(t.n * 24 for t in files)
+        # honest per-record width: whatever the key/seq/vptr arrays hold
+        # (not a hardcoded 24), so space_overhead tracks format changes
+        data_bytes = sum(
+            t.n * (t.keys.dtype.itemsize + t.seqs.dtype.itemsize
+                   + t.vptrs.dtype.itemsize) for t in files)
         segs = [int(t.model.n_segments) for t in files if t.model is not None]
         out = {
             "n_files": len(files),
@@ -587,5 +696,11 @@ class BourbonStore:
                 models_recovered=self.models_recovered,
                 vlog_disk_bytes=self.vlog.disk_bytes(),
                 vlog_segments_removed=len(self.vlog.removed),
+                vlog_dead_entries=self.vlog.dead_entries,
+                gc_us=self.cba.gc_us,
+                gc_decisions=dict(self.cba.gc_decisions),
+                auto_gc=dict(self.auto_gc_stats),
+                manifest_bytes=self._storage.manifest_bytes(),
+                manifest_checkpoints=self.cba.checkpoints,
             )
         return out

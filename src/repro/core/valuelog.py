@@ -3,6 +3,11 @@
 Values are appended to a log; sstables store only (key, value-pointer).
 Host side is a growable numpy arena; ``device_view`` exposes the log to the
 jitted ReadValue step as a (capacity, value_size) device array.
+
+The log also keeps an incremental dead-entry estimate: whenever the store
+observes that a slot was superseded (overwrite or delete), it calls
+:meth:`note_dead` with the old pointers.  The durable subclass buckets the
+counts per segment so GC candidacy needs no full-log scan.
 """
 
 from __future__ import annotations
@@ -19,9 +24,15 @@ class ValueLog:
         self._buf = np.zeros((capacity, value_size), np.uint8)
         self._head = 0
         self._device = None  # lazily mirrored; invalidated on append
+        self.dead_entries = 0  # slots superseded by overwrites/deletes
 
     def __len__(self) -> int:
         return self._head
+
+    def note_dead(self, ptrs: np.ndarray) -> None:
+        """Record that these slots were superseded.  Negative pointers
+        (tombstones / never-stored) carry no log bytes and are ignored."""
+        self.dead_entries += int((np.asarray(ptrs) >= 0).sum())
 
     def append_batch(self, values: np.ndarray) -> np.ndarray:
         """Append (B, value_size) payloads; returns (B,) int64 pointers."""

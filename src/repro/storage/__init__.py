@@ -4,14 +4,16 @@ WiscKey-style garbage collection.  See README.md in this directory for the
 file formats and the recovery/GC protocols."""
 
 from .engine import StorageEngine
-from .manifest import ManifestState, ManifestWriter, read_manifest
+from .manifest import (ManifestState, ManifestWriter, checkpoint_edit,
+                       read_manifest, set_current)
 from .recovery import load_tables
 from .sstable_io import append_model, load_sstable, write_sstable
 from .vlog import DurableValueLog
 from .wal import WALWriter, replay_wal
 
 __all__ = [
-    "StorageEngine", "ManifestState", "ManifestWriter", "read_manifest",
-    "load_tables", "append_model", "load_sstable", "write_sstable",
-    "DurableValueLog", "WALWriter", "replay_wal",
+    "StorageEngine", "ManifestState", "ManifestWriter", "checkpoint_edit",
+    "read_manifest", "set_current", "load_tables", "append_model",
+    "load_sstable", "write_sstable", "DurableValueLog", "WALWriter",
+    "replay_wal",
 ]

@@ -24,8 +24,9 @@ import os
 
 import numpy as np
 
-from .format import sst_path, wal_path
-from .manifest import ManifestState, ManifestWriter, read_manifest
+from .format import fsync_dir, manifest_name, sst_path, wal_path
+from .manifest import (ManifestState, ManifestWriter, checkpoint_edit,
+                       read_manifest, set_current)
 from .sstable_io import append_model, write_sstable
 from .wal import WALWriter, replay_wal
 
@@ -69,7 +70,17 @@ class StorageEngine:
             self.recovered = False
         else:
             self.state, manifest_no = existing
+            # sweep manifests CURRENT doesn't name: a crash mid-checkpoint
+            # leaves either an unpublished new file or an unretired old one
+            live_manifest = manifest_name(manifest_no)
+            for name in os.listdir(dirpath):
+                if name.startswith("MANIFEST-") and name != live_manifest:
+                    os.unlink(os.path.join(dirpath, name))
             self.manifest = ManifestWriter(dirpath, manifest_no, fsync)
+            # open is a fold point: tail bytes count from here, else a
+            # manifest whose folded state exceeds the threshold would
+            # re-checkpoint on the first tick of every session
+            self.manifest.base = self.manifest.size()
             self.recovered = True
             # Recovery WAL protocol: never append to the pre-crash WAL.
             # Its records are re-ingested into a fresh wal-<n+1>; only after
@@ -157,9 +168,64 @@ class StorageEngine:
         self.wal = WALWriter(wal_path(self.dir, self.wal_no), self.fsync)
         return old
 
+    # ------------------------------------------------------------- checkpoint
+    def manifest_bytes(self) -> int:
+        """Total size of the live manifest file (reporting)."""
+        return self.manifest.size()
+
+    def manifest_tail_bytes(self) -> int:
+        """Edit bytes appended since the last checkpoint — the scheduling
+        signal.  Comparing *total* size would loop forever once the folded
+        state itself outgrew the threshold: every fold would immediately
+        re-trigger.  Tail bytes go to zero after each fold by construction."""
+        return self.manifest.size() - self.manifest.base
+
+    def checkpoint(self) -> int:
+        """Fold the live state into a single checkpoint edit in a new
+        numbered MANIFEST and atomically retire the old one.
+
+        Ordering: the new file is fully written (and fsync'd when enabled)
+        *before* CURRENT switches, and the old file is deleted only after.
+        A crash at any point leaves CURRENT naming a complete manifest;
+        the other file is an orphan the next open sweeps.  Returns the
+        size of the edit log that was folded away."""
+        folded = self.manifest.size()
+        new_no = self.manifest.no + 1
+        target = os.path.join(self.dir, manifest_name(new_no))
+        if os.path.exists(target):
+            # leftover from a failed checkpoint earlier this session (the
+            # orphan sweep only runs at open): appending after its stale
+            # checkpoint edit would resurrect since-deleted files on replay
+            os.unlink(target)
+        w = ManifestWriter(self.dir, new_no, self.fsync, publish=False)
+        w.append(checkpoint_edit(self.state))
+        w.base = w.size()
+        if self.fsync:
+            # the new file's directory entry must be durable BEFORE CURRENT
+            # names it — dir-entry writeback is unordered, and a CURRENT
+            # that survives power loss pointing at a missing file would
+            # otherwise be the store's only record
+            fsync_dir(self.dir)
+        set_current(self.dir, new_no, self.fsync)   # the atomic switch
+        old_path = self.manifest.path
+        self.manifest.close()
+        self.manifest = w
+        os.unlink(old_path)
+        return folded
+
+    @staticmethod
+    def _vdead_field(edit: dict, vdead: dict | None) -> dict:
+        """Attach a dead-estimate *delta* (segments changed since the last
+        persist).  Full snapshots ride only in checkpoint edits, so an
+        ordinary edit stays O(changed segments)."""
+        if vdead:
+            edit["vdead_d"] = {str(s): int(c) for s, c in vdead.items()}
+        return edit
+
     # ----------------------------------------------------------------- flush
     def persist_flush(self, add_tables: list, delete_ids: list,
-                      seq: int, clock: float, vhead: int) -> None:
+                      seq: int, clock: float, vhead: int,
+                      vdead: dict | None = None) -> None:
         """Durably commit one flush/compaction batch and rotate the WAL.
 
         During recovery the rotation (and the manifest's WAL field) is
@@ -170,11 +236,11 @@ class StorageEngine:
             write_sstable(self.dir, t, self.fsync)
             if t.model is not None:
                 self.persisted_models.add(t.file_id)
-        edit = {
+        edit = self._vdead_field({
             "add": [[t.file_id, t.level] for t in add_tables],
             "del": [fid for fid in delete_ids if fid in self.state.live],
             "seq": seq, "clock": clock, "vhead": vhead,
-        }
+        }, vdead)
         if not self.in_recovery:
             edit["wal"] = self.wal_no + 1
         self.manifest.append(edit)
@@ -199,15 +265,18 @@ class StorageEngine:
 
     # -------------------------------------------------------------------- gc
     def persist_gc(self, removed_segs: list[int], seq: int, clock: float,
-                   vhead: int) -> None:
-        edit = {"vlog_rm": list(removed_segs), "seq": seq, "clock": clock,
-                "vhead": vhead}
+                   vhead: int, vdead: dict | None = None) -> None:
+        edit = self._vdead_field(
+            {"vlog_rm": list(removed_segs), "seq": seq, "clock": clock,
+             "vhead": vhead}, vdead)
         self.manifest.append(edit)
         self.state.apply(edit)
 
     # ----------------------------------------------------------------- close
-    def close(self, seq: int, clock: float, vhead: int) -> None:
-        self.manifest.append({"seq": seq, "clock": clock, "vhead": vhead})
+    def close(self, seq: int, clock: float, vhead: int,
+              vdead: dict | None = None) -> None:
+        self.manifest.append(self._vdead_field(
+            {"seq": seq, "clock": clock, "vhead": vhead}, vdead))
         self.abort()
 
     def abort(self) -> None:

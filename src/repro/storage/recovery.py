@@ -1,5 +1,12 @@
 """Recovery: MANIFEST replay -> live SSTables (mmap) -> WAL re-ingestion.
 
+MANIFEST replay is checkpoint-then-tail: after a checkpoint compaction the
+file named by CURRENT starts with one edit holding the entire folded state
+(live files, counters, reclaimed segments, per-segment dead-entry
+estimates), followed by whatever edits appended since — replaying in order
+needs no special casing.  Orphan numbered manifests from a crash
+mid-checkpoint are swept by ``StorageEngine`` before the writer reopens.
+
 ``load_tables`` turns a replayed :class:`ManifestState` into per-level
 lists of mmap-backed :class:`SSTable` objects, with their persisted PLR
 models reconstructed (no retraining — the whole point of serializing the
@@ -8,7 +15,8 @@ between file write and manifest edit) are deleted as garbage.
 
 The store drives the rest of the protocol: it re-ingests the old WAL's
 batches through its normal write path (so they land in the fresh WAL and,
-if the memtable fills, in new sstables), then calls
+if the memtable fills, in new sstables), restores the value log's GC
+bookkeeping (``vlog_removed``, ``vlog_dead``), then calls
 ``StorageEngine.finish_recovery``.
 """
 

@@ -37,6 +37,12 @@ class DurableValueLog(ValueLog):
         self.fsync = fsync
         self.entry_size = 16 + value_size
         self.removed: set[int] = set()
+        # incremental dead-entry estimate per segment (maintained by the
+        # store's write path via note_dead, persisted in the MANIFEST):
+        # GC candidacy reads this instead of scanning the log
+        self.dead_by_seg: dict[int, int] = {}
+        self.dead_dirty: set[int] = set()  # changed since last persist
+        self.dead_version = 0              # bumps on any estimate change
         self._entry_dt = np.dtype([("key", "<i8"), ("seq", "<i8"),
                                    ("val", "u1", (value_size,))])
         self._head_f = None
@@ -83,6 +89,30 @@ class DurableValueLog(ValueLog):
         f.close()
 
     # -------------------------------------------------------------------- gc
+    def note_dead(self, ptrs: np.ndarray) -> None:
+        ptrs = np.asarray(ptrs, np.int64)
+        ptrs = ptrs[ptrs >= 0]
+        if ptrs.shape[0] == 0:
+            return
+        self.dead_entries += int(ptrs.shape[0])
+        segs, counts = np.unique(ptrs // self.seg_slots, return_counts=True)
+        for seg, c in zip(segs.tolist(), counts.tolist()):
+            self.dead_by_seg[seg] = self.dead_by_seg.get(seg, 0) + c
+            self.dead_dirty.add(seg)
+        self.dead_version += 1
+
+    def dead_ratio_est(self, seg: int) -> float:
+        """Estimated dead fraction of a sealed segment — no file I/O."""
+        return min(1.0, self.dead_by_seg.get(seg, 0) / self.seg_slots)
+
+    def dead_delta(self) -> dict[int, int]:
+        """Per-segment counts changed since the last persist (MANIFEST
+        edits carry this delta; only checkpoints carry the full map)."""
+        return {s: self.dead_by_seg.get(s, 0) for s in self.dead_dirty}
+
+    def clear_dead_dirty(self) -> None:
+        self.dead_dirty.clear()
+
     def sealed_segments(self) -> list[int]:
         """Fully-written, not-yet-reclaimed segments (GC candidates)."""
         n_sealed = self._head // self.seg_slots
@@ -117,6 +147,9 @@ class DurableValueLog(ValueLog):
         if os.path.exists(path):
             os.unlink(path)
         self.removed.add(seg)
+        self.dead_entries -= self.dead_by_seg.pop(seg, 0)
+        self.dead_dirty.discard(seg)
+        self.dead_version += 1
         lo, hi = seg * self.seg_slots, (seg + 1) * self.seg_slots
         self._buf[lo: min(hi, self._buf.shape[0])] = 0
         self._device = None
@@ -136,10 +169,16 @@ class DurableValueLog(ValueLog):
     # --------------------------------------------------------------- recover
     @classmethod
     def open(cls, dirpath: str, value_size: int, seg_slots: int,
-             removed: set[int], vhead: int = 0,
-             fsync: bool = False) -> "DurableValueLog":
+             removed: set[int], vhead: int = 0, fsync: bool = False,
+             dead_by_seg: dict[int, int] | None = None) -> "DurableValueLog":
         vlog = cls(value_size, dirpath, seg_slots, fsync=fsync)
         vlog.removed = set(removed)
+        if dead_by_seg:
+            # restore the persisted dead estimates, minus anything a
+            # crashed GC already reclaimed (vlog_rm wins over vdead)
+            vlog.dead_by_seg = {s: c for s, c in dead_by_seg.items()
+                                if s not in vlog.removed}
+            vlog.dead_entries = sum(vlog.dead_by_seg.values())
         head = vhead
         segs = []
         for name in sorted(os.listdir(dirpath)):

@@ -1,0 +1,385 @@
+"""CBA-scheduled maintenance: auto value-log GC driven by dead-entry
+estimates, MANIFEST checkpointing, GC edge cases, and the scheduler's
+cost-benefit decisions.  Plus the drain_learning / _engine_mode / stats
+contract fixes that ride along."""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (BourbonStore, CostModel, LSMConfig,
+                        MaintenanceConfig, StoreConfig)
+from repro.core.cba import CBAConfig, MaintenanceScheduler
+from repro.core.engine import EngineConfig
+from repro.storage import read_manifest
+
+
+def small_cfg(**kw):
+    defaults = dict(policy="never", mode="wisckey", value_size=16,
+                    vlog_seg_slots=1 << 10,
+                    lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                                  l1_cap_records=1 << 13),
+                    engine=EngineConfig(seg_cap=4096))
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def _values_for(keys: np.ndarray, version: int, value_size: int = 16):
+    v = np.zeros((keys.shape[0], value_size), np.uint8)
+    v[:, 0] = (keys % 251).astype(np.uint8)
+    v[:, 1] = version % 251
+    return v
+
+
+def _overwrite_rounds(st, keys, rounds, batch=1024):
+    for ver in range(rounds):
+        for off in range(0, keys.shape[0], batch):
+            ks = keys[off: off + batch]
+            st.put_batch(ks, _values_for(ks, ver))
+
+
+# ------------------------------------------------------- dead-entry tracking
+
+def test_write_path_dead_estimates_match_liveness(tmp_path):
+    """The incremental per-segment estimates must agree with the ground
+    truth (entries whose pointer the LSM no longer returns)."""
+    st = BourbonStore.open(str(tmp_path / "db"),
+                           small_cfg(maintenance=MaintenanceConfig(
+                               auto_gc=False, auto_checkpoint=False)))
+    keys = np.arange(1, 3001, dtype=np.int64) * 3
+    _overwrite_rounds(st, keys, 3)
+    st.delete_batch(keys[:500])
+    st.flush_all()
+    # ground truth per sealed segment
+    for seg in st.vlog.sealed_segments():
+        ptrs, ks, _, _ = st.vlog.read_segment(seg, with_values=False)
+        cur = st._host_get_vptrs(ks)
+        true_dead = int((cur != ptrs).sum())
+        assert st.vlog.dead_by_seg.get(seg, 0) == true_dead, f"seg {seg}"
+    st.close()
+
+
+def test_duplicate_keys_within_batch_counted(tmp_path):
+    st = BourbonStore.open(str(tmp_path / "db"),
+                           small_cfg(maintenance=MaintenanceConfig(
+                               auto_gc=False, auto_checkpoint=False)))
+    ks = np.array([5, 5, 5, 9], dtype=np.int64)
+    st.put_batch(ks, _values_for(ks, 0))
+    # two of the three '5' slots died at append time, '9' is live
+    assert st.vlog.dead_entries == 2
+    st.put_batch(np.array([5, 9], np.int64))   # supersedes both live slots
+    assert st.vlog.dead_entries == 4
+    st.close()
+
+
+# --------------------------------------------------------------- GC edges
+
+def test_gc_empty_sealed_segment_dead_ratio_one(tmp_path):
+    """A sealed segment whose file lost every entry (e.g. OS dropped an
+    unsynced file) reads as 0 complete entries -> dead_ratio 1.0 -> must
+    be reclaimed without relocating anything."""
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg(maintenance=MaintenanceConfig(
+        auto_gc=False, auto_checkpoint=False)))
+    ks = np.arange(1, 2049, dtype=np.int64)        # seals segments 0 and 1
+    st.put_batch(ks, _values_for(ks, 0))
+    victim = st.vlog.sealed_segments()[0]
+    from repro.storage.format import vlog_path
+    with open(vlog_path(d, victim), "r+b") as f:
+        f.truncate(0)
+    res = st.gc_value_log(min_dead_ratio=0.3, segments=[victim])
+    assert res["segments_removed"] == 1
+    assert res["entries_moved"] == 0
+    assert victim in st.vlog.removed
+    # the sibling segment was untouched and its keys still read fine
+    f2, _ = st.get_batch(ks[1024:])
+    assert f2.all()
+    st.close()
+
+
+def test_gc_max_segments_mid_chunk(tmp_path):
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg(maintenance=MaintenanceConfig(
+        auto_gc=False, auto_checkpoint=False)))
+    keys = np.arange(1, 6001, dtype=np.int64) * 7
+    _overwrite_rounds(st, keys, 3)                 # most segments mostly dead
+    st.flush_all()
+    n_sealed = len(st.vlog.sealed_segments())
+    assert n_sealed > 3
+    res = st.gc_value_log(min_dead_ratio=0.1, max_segments=3)
+    assert res["segments_removed"] == 3            # stopped mid-chunk
+    assert len(st.vlog.removed) == 3
+    # reads unharmed, and a follow-up pass may keep going
+    f, _ = st.get_batch(keys)
+    assert f.all()
+    res2 = st.gc_value_log(min_dead_ratio=0.1, max_segments=None)
+    assert res2["segments_removed"] >= 1
+    f, _ = st.get_batch(keys)
+    assert f.all()
+    st.close()
+
+
+def test_gc_then_close_then_reopen_keeps_estimates_and_removed(tmp_path):
+    d = str(tmp_path / "db")
+    cfg = small_cfg(maintenance=MaintenanceConfig(auto_gc=False,
+                                                  auto_checkpoint=False))
+    st = BourbonStore.open(d, cfg)
+    keys = np.arange(1, 5001, dtype=np.int64) * 3
+    _overwrite_rounds(st, keys, 3)
+    st.delete_batch(keys[:800])
+    st.flush_all()
+    res = st.gc_value_log(min_dead_ratio=0.5)
+    assert res["segments_removed"] > 0
+    removed = set(st.vlog.removed)
+    dead_by_seg = dict(st.vlog.dead_by_seg)
+    dead_total = st.vlog.dead_entries
+    st.close()
+
+    st2 = BourbonStore.open(d, cfg)
+    assert st2.vlog.removed == removed
+    assert st2.vlog.dead_by_seg == dead_by_seg
+    assert st2.vlog.dead_entries == dead_total
+    assert st2.stats()["vlog_segments_removed"] == len(removed)
+    # the estimates keep accumulating correctly after reopen
+    st2.put_batch(keys[1000:1200], _values_for(keys[1000:1200], 9))
+    assert st2.vlog.dead_entries >= dead_total
+    f, _ = st2.get_batch(keys[800:])
+    assert f.all()
+    st2.close()
+
+
+# ----------------------------------------------------------- auto-GC (CBA)
+
+def test_auto_gc_bounds_disk_under_sustained_overwrites(tmp_path):
+    """The acceptance scenario: sustained overwrites with zero manual
+    gc_value_log calls must keep vlog disk bytes bounded and every
+    remaining sealed segment below the dead-ratio watermark (modulo the
+    per-segment T_wait window)."""
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg())     # auto_gc on by default
+    keys = np.arange(1, 4001, dtype=np.int64) * 3
+    working_set_bytes = keys.shape[0] * st.vlog.entry_size
+    _overwrite_rounds(st, keys, 12)
+    st.flush_all()
+    s = st.stats()
+    assert s["auto_gc"]["runs"] > 0
+    assert s["auto_gc"]["segments_removed"] > 0
+    appended = st.vlog._head * st.vlog.entry_size
+    assert appended > 8 * working_set_bytes    # the workload really churned
+    # bounded: disk stays within a small multiple of the live set
+    assert s["vlog_disk_bytes"] < 4 * working_set_bytes, \
+        f"vlog grew unbounded: {s['vlog_disk_bytes']}B"
+    # every sealed segment past its T_wait is below the watermark
+    t_wait = st.cba.gc_t_wait(st.vlog.seg_slots)
+    now = st.clock.now
+    for seg in st.vlog.sealed_segments():
+        if now >= st.cba.sealed_at.get(seg, now) + t_wait:
+            assert st.vlog.dead_ratio_est(seg) < \
+                st.cfg.maintenance.gc_dead_ratio + 0.35
+    # reads exact after all that churn
+    st.cfg.fetch_values = True
+    st.cfg.engine.fetch_values = True
+    f, vals = st.get_batch(keys)
+    assert f.all()
+    assert (vals[:, 1] == 11).all()            # newest version everywhere
+    assert s["gc_us"] > 0                      # charged to the virtual clock
+    st.close()
+
+
+def test_scheduler_skips_unprofitable_segments(tmp_path):
+    """Candidacy must respect watermark, T_wait, and B>C — without I/O."""
+    from repro.storage import DurableValueLog
+    vlog = DurableValueLog(16, str(tmp_path), seg_slots=64)
+    vlog.append_kv(np.arange(256, dtype=np.int64),
+                   np.arange(256, dtype=np.int64),
+                   np.zeros((256, 16), np.uint8))   # seals segments 0..3
+    sched = MaintenanceScheduler(CBAConfig(), CostModel(),
+                                 MaintenanceConfig(gc_t_wait_us=100.0))
+    vlog.note_dead(np.arange(0, 64, dtype=np.int64))     # seg 0 fully dead
+    vlog.note_dead(np.arange(64, 68, dtype=np.int64))    # seg 1 barely dead
+    # T_wait not elapsed: nothing is a candidate yet
+    assert sched.gc_candidates(vlog, now=0.0) == []
+    assert sched.gc_decisions["waiting"] > 0
+    # after T_wait: seg 0 profitable, seg 1 under the watermark
+    picked = sched.gc_candidates(vlog, now=500.0)
+    assert picked == [0]
+    assert sched.gc_decisions["skipped"] > 0
+    # a dead-but-tiny-benefit segment loses to cost when the rate is ~0
+    starved = MaintenanceScheduler(
+        CBAConfig(), CostModel(gc_benefit_per_dead_byte=1e-9),
+        MaintenanceConfig(gc_t_wait_us=0.0))
+    assert starved.gc_candidates(vlog, now=500.0) == []
+    vlog.close()
+
+
+# ------------------------------------------------------ MANIFEST checkpoint
+
+def test_manifest_checkpoint_recovers_identical_state(tmp_path):
+    d = str(tmp_path / "db")
+    cfg = small_cfg(maintenance=MaintenanceConfig(
+        auto_gc=True, checkpoint_bytes=2048))
+    st = BourbonStore.open(d, cfg)
+    keys = np.arange(1, 4001, dtype=np.int64) * 3
+    _overwrite_rounds(st, keys, 8)
+    st.flush_all()
+    s = st.stats()
+    assert s["manifest_checkpoints"] > 0
+    assert s["manifest_bytes"] < 2048 + 1024   # folded, not still growing
+    # exactly one numbered manifest remains, and it replays to the very
+    # state the engine holds in memory
+    manifests = [n for n in os.listdir(d) if n.startswith("MANIFEST-")]
+    assert len(manifests) == 1
+    state, no = read_manifest(d)
+    assert no == st._storage.manifest.no
+    assert state == st._storage.state
+    st.close()
+
+    st2 = BourbonStore.open(d, cfg)
+    f, _ = st2.get_batch(keys)
+    assert f.all()
+    st2.close()
+
+
+def test_orphan_manifest_from_crashed_checkpoint_swept(tmp_path):
+    """Crash between writing MANIFEST-<n+1> and switching CURRENT leaves
+    an orphan; the next open must ignore and remove it."""
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg())
+    ks = np.arange(1, 2001, dtype=np.int64)
+    st.put_batch(ks, _values_for(ks, 0))
+    st.flush_all()
+    st.close()
+    orphan = os.path.join(d, "MANIFEST-000042")
+    with open(orphan, "wb") as f:
+        f.write(b"half-written checkpoint")
+    st2 = BourbonStore.open(d, small_cfg())
+    assert not os.path.exists(orphan)
+    f_, _ = st2.get_batch(ks)
+    assert f_.all()
+    st2.close()
+
+
+def test_checkpoint_not_retriggered_when_folded_state_large(tmp_path):
+    """Once the folded state itself exceeds the threshold, scheduling must
+    key on tail bytes since the last fold — total size would re-checkpoint
+    on every tick, and base must reset across reopen too."""
+    d = str(tmp_path / "db")
+    cfg = small_cfg(maintenance=MaintenanceConfig(checkpoint_bytes=512))
+    st = BourbonStore.open(d, cfg)
+    keys = np.arange(1, 4001, dtype=np.int64) * 3
+    _overwrite_rounds(st, keys, 6)
+    st.flush_all()
+    assert st._storage.manifest_bytes() > 512   # folded state > threshold
+    n = st.cba.checkpoints
+    for _ in range(30):
+        st.get_batch(keys[:64])                 # ticks with no new edits
+    assert st.cba.checkpoints == n, "checkpoint loop on read-only ticks"
+    st.close()
+    st2 = BourbonStore.open(d, cfg)
+    n2 = st2.cba.checkpoints
+    for _ in range(30):
+        st2.get_batch(keys[:64])
+    assert st2.cba.checkpoints == n2, "checkpoint re-fired after reopen"
+    st2.close()
+
+
+def test_dangling_current_raises_not_empty_store(tmp_path):
+    """CURRENT naming a missing manifest must error — replaying it as an
+    empty store would sweep every live file as garbage."""
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg())
+    st.put_batch(np.arange(1, 2001, dtype=np.int64))
+    st.flush_all()
+    st.close()
+    mpath = [n for n in os.listdir(d) if n.startswith("MANIFEST-")][0]
+    os.rename(os.path.join(d, mpath), os.path.join(d, "stash"))
+    with pytest.raises(FileNotFoundError, match="CURRENT"):
+        BourbonStore.open(d, small_cfg())
+    # nothing was deleted by the failed open; restoring recovers fully
+    os.rename(os.path.join(d, "stash"), os.path.join(d, mpath))
+    st2 = BourbonStore.open(d, small_cfg())
+    f, _ = st2.get_batch(np.arange(1, 2001, dtype=np.int64))
+    assert f.all()
+    st2.close()
+
+
+def test_explicit_checkpoint_roundtrip(tmp_path):
+    """Engine-level checkpoint: fold, retire, replay equals state."""
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg(maintenance=MaintenanceConfig(
+        auto_gc=False, auto_checkpoint=False)))
+    keys = np.arange(1, 4001, dtype=np.int64) * 5
+    _overwrite_rounds(st, keys, 2)
+    st.flush_all()
+    st.gc_value_log(min_dead_ratio=0.3)
+    eng = st._storage
+    before = dataclasses.replace(eng.state,
+                                 live=dict(eng.state.live),
+                                 vlog_removed=set(eng.state.vlog_removed),
+                                 vlog_dead=dict(eng.state.vlog_dead))
+    old_no = eng.manifest.no
+    folded = eng.checkpoint()
+    assert folded > 0
+    assert eng.manifest.no == old_no + 1
+    state, no = read_manifest(d)
+    assert no == old_no + 1
+    assert state == before
+    st.close()
+
+
+# ------------------------------------------------------------- satellites
+
+def test_drain_learning_returns_job_count(tmp_path):
+    cfg = small_cfg(mode="bourbon", policy="always",
+                    cba=CBAConfig(policy="always", t_wait_us=0.0))
+    st = BourbonStore.open(str(tmp_path / "db"), cfg)
+    ks = np.arange(1, 8001, dtype=np.int64) * 3
+    st.put_batch(ks, _values_for(ks, 0))
+    st.flush_all()
+    n_files = st.stats()["n_files"]
+    assert n_files > 0
+    drained = st.drain_learning()
+    assert drained >= n_files - st._models_swept_at or drained > 0
+    assert not st.executor.queue and not st.executor.running
+    # idempotent: nothing left to drain
+    assert st.drain_learning() == 0
+    st.close()
+
+
+def test_drain_learning_raises_instead_of_silent_giveup(tmp_path):
+    cfg = small_cfg(mode="bourbon", policy="always",
+                    cba=CBAConfig(policy="always", t_wait_us=0.0),
+                    costs=CostModel(learn_per_key=1e9))  # jobs ~never finish
+    st = BourbonStore.open(str(tmp_path / "db"), cfg)
+    ks = np.arange(1, 4001, dtype=np.int64)
+    st.put_batch(ks, _values_for(ks, 0))
+    st.flush_all()
+    assert st.executor.queue or st.executor.running
+    with pytest.raises(RuntimeError, match="outstanding"):
+        st.drain_learning(max_us=50_000.0)
+    st.close()
+
+
+def test_engine_mode_not_model_pure_on_empty_tree():
+    st = BourbonStore(StoreConfig(mode="bourbon", policy="always"))
+    assert not list(st.tree.all_files())
+    assert st._engine_mode() == "model"
+    # still resolves correctly once files exist
+    st.put_batch(np.arange(1, 30001, dtype=np.int64))
+    st.flush_all()
+    st.learn_all()
+    assert st._engine_mode() == "model_pure"
+
+
+def test_stats_data_bytes_from_dtypes():
+    st = BourbonStore(StoreConfig(mode="bourbon", policy="never"))
+    st.put_batch(np.arange(1, 30001, dtype=np.int64))
+    st.flush_all()
+    s = st.stats()
+    want = sum(t.n * (t.keys.dtype.itemsize + t.seqs.dtype.itemsize
+                      + t.vptrs.dtype.itemsize)
+               for t in st.tree.all_files())
+    assert s["data_bytes"] == want
+    assert want == s["n_records"] * 24      # int64 triple today
