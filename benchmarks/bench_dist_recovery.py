@@ -1,0 +1,124 @@
+"""Sharded durable store: kill mid-write, reopen from the per-shard
+directories vs rebuild the distributed plane from scratch.
+
+The old plane rebuilt its range-partitioned state from a transient
+in-memory snapshot on every process start — re-ingesting the data and
+refitting every model.  With the shard lifecycle on the storage engine,
+reopen is MANIFEST replay + mmap'd sstables (persisted file/level models
+included) + WAL replay for the unflushed tail, then one device-state
+stack over the recovered snapshots.  Reported:
+
+* ``reopen_from_disk``       — ShardedStore.open on the killed directory
+                               tree + first distributed GET.
+* ``rebuild_from_scratch``   — fresh directory, re-put the full stream,
+                               learn_all, first distributed GET (what a
+                               snapshotless plane pays after any crash).
+* ``snapshot_load``          — load_shard_snapshot per shard directory
+                               (the raw sstable_io path, no store).
+
+``REPRO_BENCH_SMOKE=1`` shrinks the load so CI exercises the kill/reopen
+path in seconds.
+"""
+
+from __future__ import annotations
+
+import gc
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import LSMConfig, MaintenanceConfig, StoreConfig, make_dataset
+from repro.core.engine import EngineConfig
+from repro.distributed import ShardedConfig, ShardedStore, load_shard_snapshot
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+N_KEYS = (1 << 13) if SMOKE else (1 << 17)
+N_SHARDS = 2 if SMOKE else 4
+BATCH = 1 << 12
+
+
+def _store_cfg() -> StoreConfig:
+    # smoke shrinks the LSM geometry too, so the load still reaches the
+    # deeper levels and exercises level-model persistence
+    lsm = (LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                     l1_cap_records=1 << 13) if SMOKE else
+           LSMConfig(memtable_cap=1 << 12, file_cap=1 << 13,
+                     l1_cap_records=1 << 15))
+    return StoreConfig(mode="bourbon", granularity="level", policy="always",
+                       value_size=16, lsm=lsm,
+                       engine=EngineConfig(seg_cap=4096),
+                       maintenance=MaintenanceConfig(auto_gc=False,
+                                                     auto_checkpoint=False,
+                                                     track_dead=False))
+
+
+def _scfg(keys: np.ndarray) -> ShardedConfig:
+    bounds = tuple(int(b) for b in
+                   np.quantile(keys, np.arange(1, N_SHARDS) / N_SHARDS))
+    return ShardedConfig(n_shards=N_SHARDS, boundaries=bounds)
+
+
+def _load(st: ShardedStore, keys: np.ndarray) -> None:
+    for off in range(0, keys.shape[0], BATCH):
+        st.put_batch(keys[off: off + BATCH])
+
+
+def run() -> None:
+    keys = make_dataset("ar", N_KEYS, seed=1)
+    perm = np.random.default_rng(0).permutation(keys)
+    # the kill-time tail stays below the per-shard memtable capacity: it
+    # lives only in the WALs, so the persisted file/level models are still
+    # current when the store dies (reopen serves them, relearning nothing)
+    n_tail = min(BATCH, N_KEYS // 8)
+    flushed, tail = perm[: -n_tail], perm[-n_tail:]
+    probes = np.concatenate([perm[: 1 << 12], perm[: 1 << 10] + 1])
+    d = tempfile.mkdtemp(prefix="bourbon_dist_recovery_")
+    d2 = tempfile.mkdtemp(prefix="bourbon_dist_rebuild_")
+    try:
+        st = ShardedStore.open(d, _scfg(keys), _store_cfg())
+        _load(st, flushed)
+        st.flush_all()
+        st.learn_all()
+        _load(st, tail)       # WAL-only at kill time
+        st.get_batch(probes)  # warm process-wide jax init out of the timings
+        del st                # KILL: no close
+        gc.collect()
+
+        t0 = time.perf_counter()
+        st = ShardedStore.open(d)          # per-shard directories alone
+        found, _ = st.get_batch(probes)    # includes the state stack
+        reopen_us = (time.perf_counter() - t0) * 1e6
+        s = st.stats()
+        assert found[: 1 << 12].all()
+        emit("dist_recovery/reopen_from_disk", reopen_us,
+             f"shards={s['n_shards']} models_recovered="
+             f"{s['models_recovered']} level_models="
+             f"{s['level_models_recovered']} relearned={s['files_learned']}")
+        st.close()
+
+        t0 = time.perf_counter()
+        snaps = [load_shard_snapshot(os.path.join(d, f"shard-{i}"))
+                 for i in range(N_SHARDS)]
+        snap_us = (time.perf_counter() - t0) * 1e6
+        emit("dist_recovery/snapshot_load", snap_us,
+             f"records={sum(k.shape[0] for k, _ in snaps)}")
+
+        t0 = time.perf_counter()
+        st = ShardedStore.open(d2, _scfg(keys), _store_cfg())
+        _load(st, flushed)
+        st.flush_all()
+        st.learn_all()
+        _load(st, tail)
+        found, _ = st.get_batch(probes)
+        rebuild_us = (time.perf_counter() - t0) * 1e6
+        assert found[: 1 << 12].all()
+        emit("dist_recovery/rebuild_from_scratch", rebuild_us,
+             f"speedup={rebuild_us / max(reopen_us, 1.0):.1f}x")
+        st.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+        shutil.rmtree(d2, ignore_errors=True)

@@ -27,6 +27,9 @@ SUITES = {
     "gc": ("bench_gc_policy",
            "manual vs CBA-scheduled value-log GC under sustained "
            "overwrites"),
+    "dist_recovery": ("bench_dist_recovery",
+                      "sharded store killed mid-write: reopen from shard "
+                      "dirs vs rebuild from scratch"),
 }
 
 

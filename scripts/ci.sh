@@ -13,3 +13,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 # MANIFEST checkpointing) on a shrunk load
 REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run gc
+
+# distributed plane on a real multi-device mesh: a separate process so the
+# host-platform device-count flag applies before jax initializes — runs the
+# shard_map GET and the 4-shard ShardedStore tests that skip on one device
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_distributed.py
+
+# sharded durable store: kill mid-write, reopen from the shard directories
+# (smoke scale; reports reopen-from-disk vs rebuild-from-scratch)
+REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run dist_recovery

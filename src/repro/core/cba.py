@@ -125,7 +125,21 @@ class CostBenefitAnalyzer:
 class MaintenanceConfig:
     """Knobs for CBA-scheduled background maintenance (durable stores)."""
     auto_gc: bool = True             # schedule value-log GC from _tick
+    # maintain per-segment dead-entry estimates in the write path.  On by
+    # default even with auto_gc off — the estimates persist via MANIFEST
+    # vdead, so a later auto_gc=True session inherits them — but the
+    # full-LSM liveness lookup costs per write batch; disable for pure
+    # ingest benchmarks
+    track_dead: bool = True
     gc_dead_ratio: float = 0.3       # candidacy watermark (estimated)
+
+    def __post_init__(self):
+        if self.auto_gc and not self.track_dead:
+            # the scheduler's candidacy reads the estimates track_dead
+            # maintains; "GC on, tracking off" would silently never collect
+            raise ValueError(
+                "auto_gc=True requires track_dead=True (GC candidacy is "
+                "driven by the write-path dead-entry estimates)")
     gc_t_wait_us: float | None = None  # None -> worst-case collect cost
     gc_max_segments_per_tick: int = 4
     gc_scan_interval_us: float = 256.0  # min virtual time between scans
@@ -270,7 +284,17 @@ class LearningExecutor:
         self.files_learned = 0
         self.level_attempts = 0
         self.level_failures = 0
+        # monotonic identity for level models: every fit gets a fresh
+        # epoch, cache keys and the MANIFEST ``lmodel`` record both use it.
+        # A recovered store seeds this past the largest persisted epoch so
+        # epochs stay unique across reopens.
+        self.next_model_epoch = 0
         self._seq = itertools.count()
+
+    def alloc_model_epoch(self) -> int:
+        epoch = self.next_model_epoch
+        self.next_model_epoch += 1
+        return epoch
 
     # ------------------------------------------------------------ submission
     def maybe_submit_file(self, t: SSTable, now: float) -> None:
@@ -335,4 +359,6 @@ class LearningExecutor:
         import numpy as np
         from .plr import greedy_plr_np
         keys = np.concatenate([t.keys for t in tree.levels[level]])
-        return greedy_plr_np(keys, delta=self.plr_delta)
+        model = greedy_plr_np(keys, delta=self.plr_delta)
+        model.epoch = self.alloc_model_epoch()
+        return model

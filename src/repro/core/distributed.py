@@ -32,10 +32,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from .jaxcompat import shard_map
 from .plr import greedy_plr_np
 
-__all__ = ["DistStoreConfig", "build_dist_state", "dist_state_specs",
-           "build_dist_get", "dist_get_local"]
+__all__ = ["DistStoreConfig", "build_dist_state", "build_dist_state_from_shards",
+           "dist_state_specs", "build_dist_get", "dist_get_local", "next_pow2"]
 
 KEY_SENTINEL = np.iinfo(np.int64).max
+
+
+def next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,36 +50,50 @@ class DistStoreConfig:
     seg_cap: int = 512       # per-shard PLR segments (padded)
 
     def shard_cap(self, n_shards: int) -> int:
-        per = -(-self.n_keys // n_shards)
-        return 1 << max(0, (per - 1).bit_length())
+        return next_pow2(-(-self.n_keys // n_shards))
 
 
-def build_dist_state(keys: np.ndarray, vptrs: np.ndarray, n_shards: int,
-                     cfg: DistStoreConfig):
-    """Host build: sorted keys -> stacked (n_shards, C) arrays + per-shard
-    PLR models + range boundaries."""
-    n = keys.shape[0]
-    cap = cfg.shard_cap(n_shards)
+def _stack_shards(chunks, delta: int, cap: int | None,
+                  seg_cap: int | None, models=None):
+    """Stack per-shard sorted (keys, vptrs) snapshots into the device-state
+    dict, fitting one PLR model per shard.  ``cap``/``seg_cap`` default to
+    the live maxima (padded to a power of two) so disk-recovered shards of
+    any size fit; passing them pins the legacy fixed geometry.  ``models``
+    supplies pre-fit per-shard PLR models (must use the same ``delta``) so
+    a caller refreshing one shard need not refit the rest."""
+    n_shards = len(chunks)
+    if models is None:
+        models = [greedy_plr_np(k, delta=delta) if k.shape[0] else None
+                  for k, _ in chunks]
+    if cap is None:
+        cap = max(64, next_pow2(max((k.shape[0] for k, _ in chunks),
+                                    default=1)))
+    if seg_cap is None:
+        seg_cap = max(16, next_pow2(max(
+            (int(m.n_segments) for m in models if m is not None), default=1)))
     ks = np.full((n_shards, cap), KEY_SENTINEL, np.int64)
     vs = np.full((n_shards, cap), -1, np.int64)
     ns = np.zeros((n_shards,), np.int32)
     lo = np.full((n_shards,), KEY_SENTINEL, np.int64)
     hi = np.full((n_shards,), KEY_SENTINEL, np.int64)
-    starts = np.full((n_shards, cfg.seg_cap), np.inf, np.float64)
-    slopes = np.zeros((n_shards, cfg.seg_cap), np.float64)
-    icepts = np.zeros((n_shards, cfg.seg_cap), np.float64)
+    starts = np.full((n_shards, seg_cap), np.inf, np.float64)
+    slopes = np.zeros((n_shards, seg_cap), np.float64)
+    icepts = np.zeros((n_shards, seg_cap), np.float64)
     nseg = np.zeros((n_shards,), np.int32)
-    per = -(-n // n_shards)
-    for s in range(n_shards):
-        chunk = keys[s * per: (s + 1) * per]
+    for s, ((chunk, vp), m) in enumerate(zip(chunks, models)):
         if chunk.shape[0] == 0:
             continue
+        if chunk.shape[0] > cap:
+            raise ValueError(f"shard {s} holds {chunk.shape[0]} keys > "
+                             f"cap {cap}")
         ks[s, : chunk.shape[0]] = chunk
-        vs[s, : chunk.shape[0]] = vptrs[s * per: (s + 1) * per]
+        vs[s, : chunk.shape[0]] = vp
         ns[s] = chunk.shape[0]
         lo[s], hi[s] = chunk[0], chunk[-1]
-        m = greedy_plr_np(chunk, delta=cfg.delta, pad_to=cfg.seg_cap)
         k = int(m.n_segments)
+        if k > seg_cap:
+            raise ValueError(f"shard {s} model needs {k} segments > "
+                             f"seg_cap {seg_cap}")
         starts[s, :k] = np.asarray(m.starts)[:k]
         slopes[s, :k] = np.asarray(m.slopes)[:k]
         icepts[s, :k] = np.asarray(m.intercepts)[:k]
@@ -83,6 +101,32 @@ def build_dist_state(keys: np.ndarray, vptrs: np.ndarray, n_shards: int,
     return {"keys": ks, "vptrs": vs, "n": ns, "lo": lo, "hi": hi,
             "starts": starts, "slopes": slopes, "icepts": icepts,
             "nseg": nseg}
+
+
+def build_dist_state(keys: np.ndarray, vptrs: np.ndarray, n_shards: int,
+                     cfg: DistStoreConfig):
+    """Host build: one globally sorted snapshot -> equal-count range chunks
+    stacked into (n_shards, C) arrays + per-shard PLR models."""
+    n = keys.shape[0]
+    per = -(-n // n_shards)
+    chunks = [(keys[s * per: (s + 1) * per], vptrs[s * per: (s + 1) * per])
+              for s in range(n_shards)]
+    return _stack_shards(chunks, cfg.delta, cfg.shard_cap(n_shards),
+                         cfg.seg_cap)
+
+
+def build_dist_state_from_shards(snapshots, delta: int = 8, models=None):
+    """Device state from per-shard snapshots (the durable-plane entry
+    point): ``snapshots`` is a list of (keys, vptrs) pairs, one per range
+    partition, each sorted by key with shadowed versions and tombstones
+    already dropped — exactly what ``repro.distributed`` derives from a
+    shard directory's sstables.  Geometry (row capacity, segment cap) is
+    sized to the live maxima, so shards recovered from disk never need a
+    global key count up front.  ``models`` optionally carries pre-fit
+    per-shard PLR models (same ``delta``), letting an epoch-cached caller
+    refit only the shards whose snapshot actually changed."""
+    return _stack_shards([(np.asarray(k, np.int64), np.asarray(v, np.int64))
+                          for k, v in snapshots], delta, None, None, models)
 
 
 def dist_state_specs(mesh, cfg: DistStoreConfig):
@@ -117,7 +161,11 @@ def dist_get_local(shard, probes, delta: int, seg_search: str = "bisect"):
     import math
     keys = shard["keys"][0]
     C = keys.shape[0]
-    mine = (probes >= shard["lo"][0]) & (probes <= shard["hi"][0])
+    # an empty shard keeps lo = hi = KEY_SENTINEL, so a probe equal to the
+    # sentinel would otherwise "match" and index the zeroed model — mask
+    # empty shards out explicitly
+    mine = ((shard["n"][0] > 0)
+            & (probes >= shard["lo"][0]) & (probes <= shard["hi"][0]))
     pf = probes.astype(jnp.float64)
     starts = shard["starts"][0]
     if seg_search == "compare":

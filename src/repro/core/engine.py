@@ -199,9 +199,12 @@ class LookupEngine:
         self.cfg = cfg
         self._state_cache: dict[int, DeviceLevel] = {}
         self._state_versions: list[int] = [-1] * N_LEVELS
-        self._lm_versions: list[int] = [-1] * N_LEVELS
+        self._lm_versions: list = [-1] * N_LEVELS
         self._lm_cache: dict[int, LevelModel] = {}
         self._jit_cache: dict = {}
+        # stamp for level models that arrive without an epoch: unique,
+        # decreasing, never reused — store-fit models carry epochs >= 0
+        self._unstamped_epoch = -2
 
     # ---------------------------------------------------------------- build
     def _build_level(self, tables, cfg: EngineConfig) -> DeviceLevel:
@@ -282,7 +285,15 @@ class LookupEngine:
         level_models = level_models or [None] * N_LEVELS
         for i in range(N_LEVELS):
             ver = tree.level_version[i]
-            mver = (ver, id(level_models[i]))
+            # cache key = (level version, model epoch): id() is unsafe here
+            # (the allocator reuses addresses after GC, which can serve a
+            # stale LevelModel for a same-version level); the epoch is
+            # monotonic per store and persisted, so it also survives reopen
+            lm = level_models[i]
+            if lm is not None and getattr(lm, "epoch", -1) == -1:
+                lm.epoch = self._unstamped_epoch
+                self._unstamped_epoch -= 1
+            mver = (ver, None if lm is None else lm.epoch)
             if self._state_versions[i] != ver or i not in self._state_cache:
                 self._state_cache[i] = self._build_level(tree.levels[i], self.cfg)
                 self._state_versions[i] = ver

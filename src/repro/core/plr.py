@@ -42,6 +42,11 @@ class PLRModel:
     intercepts: jnp.ndarray  # (S,) float64  (pos = slope * key + intercept)
     n_segments: jnp.ndarray  # () int32
     delta: int = 8           # static error bound
+    # host-side identity: a monotonic epoch stamped by whoever fit (or
+    # loaded) the model.  Cache keys use it instead of id(), which the
+    # allocator can reuse after GC.  Not a pytree leaf — traced copies
+    # reset to the -1 "unstamped" sentinel.
+    epoch: int = -1
 
     def tree_flatten(self):
         return (self.starts, self.slopes, self.intercepts, self.n_segments), (self.delta,)

@@ -23,8 +23,8 @@ import dataclasses
 
 import numpy as np
 
-from .cba import (CBAConfig, CostBenefitAnalyzer, LearningExecutor,
-                  MaintenanceConfig, MaintenanceScheduler)
+from .cba import (CBAConfig, LearningExecutor, MaintenanceConfig,
+                  MaintenanceScheduler)
 from .clock import CostModel, VirtualClock
 from .engine import EngineConfig, LookupEngine, LookupResult
 from .lsm import LSMConfig, LSMTree, N_LEVELS
@@ -97,6 +97,8 @@ class BourbonStore:
         self._events_persisted = 0
         self._models_swept_at = 0
         self.models_recovered = 0
+        self.level_models_recovered = 0
+        self._lm_persisted: dict[int, int] = {}  # level -> epoch on disk
         # CBA-scheduled maintenance (auto value-log GC + checkpointing)
         self._in_maintenance = False
         self.auto_gc_stats = {"runs": 0, "segments_removed": 0,
@@ -153,6 +155,28 @@ class BourbonStore:
             if t.model is not None:
                 eng.persisted_models.add(t.file_id)
         self.models_recovered = len(eng.persisted_models)
+        # epochs must stay unique across reopens: resume past the largest
+        # persisted one even when the models themselves aren't loaded
+        # (e.g. a file-granularity open of a level-granularity directory)
+        if state.level_models:
+            self.executor.next_model_epoch = \
+                max(state.level_models.values()) + 1
+        # persisted level models (§4.3): reload them BEFORE WAL replay and
+        # pin the version baseline, so a replay-triggered flush invalidates
+        # exactly the levels it touches — mirroring the manifest, whose
+        # add/del edits drop the lmodel records of touched levels
+        if self.cfg.granularity == "level" and self.cfg.mode == "bourbon":
+            from repro.storage import load_level_model
+            from repro.storage.format import lmodel_path
+            for level, epoch in state.level_models.items():
+                m = load_level_model(lmodel_path(eng.dir, level, epoch))
+                if m is None:
+                    continue   # torn sidecar: fall back to relearning
+                m.epoch = epoch
+                self.level_models[level] = m
+                self._lm_persisted[level] = epoch
+                self.level_models_recovered += 1
+        self._level_model_versions = list(self.tree.level_version)
         self.vlog = durable_vlog_cls.open(
             eng.dir, self.cfg.value_size, self.cfg.vlog_seg_slots,
             state.vlog_removed, state.vhead, fsync=self.cfg.fsync,
@@ -173,18 +197,17 @@ class BourbonStore:
         # recovered-but-unlearned files re-enter the learning pipeline
         self._pending_wait.extend(
             t for t in self.tree.all_files() if t.model is None)
-        self._level_model_versions = list(self.tree.level_version)
-        # level models are not persisted (ROADMAP open item): resubmit the
-        # learning jobs, else a reopened level-granularity store would
-        # serve the baseline path forever.  Skip levels a replay-flush
-        # already submitted via _after_structure_change.
+        # levels whose persisted model was missing, torn, or invalidated by
+        # a replay flush resubmit their learning jobs — the rest serve the
+        # model path immediately with an empty learn queue
         if (self.cfg.granularity == "level" and self.cfg.mode == "bourbon"
                 and self.cfg.policy != "offline"):
             queued = {j.level for j in self.executor.queue if j.is_level}
             queued |= {j.level for _, j in self.executor.running
                        if j.is_level}
             for i in range(1, N_LEVELS):
-                if self.tree.levels[i] and i not in queued:
+                if (self.tree.levels[i] and self.level_models[i] is None
+                        and i not in queued):
                     self.executor.submit_level(self.tree, i, self.clock.now)
 
     def close(self) -> None:
@@ -193,6 +216,7 @@ class BourbonStore:
         even on clean shutdown)."""
         if self._storage is None:
             return
+        self._sweep_level_models()
         self.vlog.close()
         self._storage.close(self._seq, self.clock.now, len(self.vlog),
                             vdead=self.vlog.dead_delta())
@@ -215,8 +239,8 @@ class BourbonStore:
         seqs = np.arange(self._seq, self._seq + b, dtype=np.int64)
         self._seq += b
         vptrs = self.vlog.append_kv(keys, seqs, values)
-        if self._storage is not None:   # before ingest: pre-write versions
-            self._note_superseded(keys, vptrs)
+        if self._storage is not None and self.cfg.maintenance.track_dead:
+            self._note_superseded(keys, vptrs)   # before ingest: pre-write
         self._ingest(keys, seqs, vptrs)
         self.n_puts += b
         self.foreground_us += self.cfg.costs.t_put * b
@@ -230,7 +254,7 @@ class BourbonStore:
         seqs = np.arange(self._seq, self._seq + b, dtype=np.int64)
         self._seq += b
         vptrs = np.full(b, -1, np.int64)  # tombstones
-        if self._storage is not None:
+        if self._storage is not None and self.cfg.maintenance.track_dead:
             self._note_superseded(keys, None)
         self._ingest(keys, seqs, vptrs)
         self.clock.advance(self.cfg.costs.t_put * b)
@@ -316,6 +340,12 @@ class BourbonStore:
             for i in range(1, N_LEVELS):
                 if self.tree.level_version[i] != self._level_model_versions[i]:
                     self.level_models[i] = None
+                    # the manifest's add/del edit (already appended by
+                    # _persist_structure) dropped this level's lmodel
+                    # record; mirror that here and reap the sidecar
+                    stale = self._lm_persisted.pop(i, None)
+                    if stale is not None and self._storage is not None:
+                        self._storage.drop_level_model(i, stale)
                     self._level_model_versions[i] = self.tree.level_version[i]
                     if self.cfg.policy != "offline":
                         self.executor.submit_level(self.tree, i, self.clock.now)
@@ -328,6 +358,7 @@ class BourbonStore:
         if self.cfg.mode != "bourbon" or self.cfg.policy in ("offline", "never"):
             # offline/never: no online learning
             self.executor.tick(self.tree, self.clock.now, self.level_models)
+            self._sweep_level_models()
             self._maintenance_tick()
             return
         if self.cfg.granularity == "file":
@@ -346,6 +377,7 @@ class BourbonStore:
                 and self.executor.files_learned != self._models_swept_at):
             self._models_swept_at = self.executor.files_learned
             self._persist_new_models()
+        self._sweep_level_models()
         self._maintenance_tick()
 
     def _maintenance_tick(self) -> None:
@@ -383,6 +415,21 @@ class BourbonStore:
         for t in self.tree.all_files():
             if t.model is not None:
                 self._storage.persist_model(t)
+
+    def _sweep_level_models(self) -> None:
+        """Durably publish level models whose epoch the MANIFEST doesn't
+        reference yet.  Every fit stamps a fresh monotonic epoch (the
+        executor's counter, seeded past the persisted maximum on
+        recovery), so "new" is simply epoch-not-yet-persisted."""
+        if self._storage is None or self.cfg.granularity != "level":
+            return
+        for i, m in enumerate(self.level_models):
+            if m is None or getattr(m, "epoch", -1) < 0:
+                continue
+            if self._lm_persisted.get(i) == m.epoch:
+                continue
+            self._storage.persist_level_model(i, m)
+            self._lm_persisted[i] = m.epoch
 
     # ------------------------------------------------------------------ read
     def _engine_mode(self) -> str:
@@ -498,6 +545,8 @@ class BourbonStore:
                     keys = np.concatenate([t.keys for t in self.tree.levels[i]])
                     self.level_models[i] = greedy_plr_np(
                         keys, delta=self.cfg.lsm.plr_delta)
+                    self.level_models[i].epoch = \
+                        self.executor.alloc_model_epoch()
                     self._level_model_versions[i] = self.tree.level_version[i]
                     n += 1
             # L0 cannot be level-learned (overlapping ranges) -> file models
@@ -518,6 +567,7 @@ class BourbonStore:
         if self._storage is not None:
             self._models_swept_at = self.executor.files_learned
             self._persist_new_models()
+            self._sweep_level_models()
         return n
 
     def flush_all(self) -> None:
@@ -694,6 +744,8 @@ class BourbonStore:
         if self._storage is not None:
             out.update(
                 models_recovered=self.models_recovered,
+                level_models_recovered=self.level_models_recovered,
+                level_models_persisted=dict(self._lm_persisted),
                 vlog_disk_bytes=self.vlog.disk_bytes(),
                 vlog_segments_removed=len(self.vlog.removed),
                 vlog_dead_entries=self.vlog.dead_entries,

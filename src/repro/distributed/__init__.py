@@ -1,0 +1,11 @@
+"""Distributed plane rebuilt on the durable storage engine: a
+:class:`ShardedStore` of range-partitioned :class:`~repro.core.store.
+BourbonStore` shards, each owning its own ``shard-<i>/`` directory (WAL,
+MANIFEST, sstables, value log), serving batched GETs through the
+``shard_map`` read path against an epoch-versioned device snapshot."""
+
+from .sharded import (ShardedConfig, ShardedStore, load_shard_snapshot,
+                      merge_live)
+
+__all__ = ["ShardedConfig", "ShardedStore", "load_shard_snapshot",
+           "merge_live"]

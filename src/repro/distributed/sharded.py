@@ -1,0 +1,408 @@
+"""ShardedStore — the durable, range-partitioned cluster plane.
+
+One lifecycle ties the three layers together (the multi-layer refactor of
+the old demo plane, which rebuilt transient in-memory arrays on every
+process start):
+
+* **storage** — every range partition is a full :class:`BourbonStore`
+  backed by its own ``shard-<i>/`` directory (WAL, MANIFEST, sstables
+  with persisted PLR models, value log).  Killing the process loses
+  nothing: each shard recovers independently through the engine's normal
+  protocol, and the topology itself (shard count + split keys) lives in
+  an atomically-written ``SHARDS.json`` next to the shard directories.
+* **snapshot** — the distributed GET runs against stacked per-shard
+  snapshots derived from the shards' *durable* sstables (newest-seq-wins
+  merge, tombstones dropped), not from a side copy of the data.
+  :func:`load_shard_snapshot` builds the same snapshot straight from a
+  shard directory with nothing but ``storage.sstable_io`` — no store
+  open, no WAL replay — which is what the ``dist_recovery`` benchmark
+  times against a full rebuild.
+* **epoch** — the device state is versioned by each shard's structural
+  epoch (its tree's flush/compaction event count).  Writes land in
+  per-shard memtables (host overlay on reads); when a memtable rolls
+  into a new snapshot the owning shard's row is rebuilt and the global
+  ``state_epoch`` bumps, so the ``shard_map`` GET always sees a
+  consistent immutable "level" per shard, exactly the paper's read-path
+  contract (§4.3 applied cluster-wide).
+
+GETs check the owning shard's memtable first (newest data wins,
+tombstones shadow), then answer the rest through
+``core.distributed.build_dist_get`` when a mesh with one device per
+shard is available, or through the same ``dist_get_local`` shard kernel
+looped on the host otherwise — both paths share the masked-ownership
+semantics, so results are identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cba import CBAConfig, MaintenanceConfig
+from repro.core.clock import CostModel
+from repro.core.distributed import (DistStoreConfig, build_dist_get,
+                                    build_dist_state_from_shards,
+                                    dist_get_local, next_pow2)
+from repro.core.engine import EngineConfig
+from repro.core.jaxcompat import make_mesh, set_mesh
+from repro.core.lsm import LSMConfig
+from repro.core.plr import greedy_plr_np
+from repro.core.store import BourbonStore, StoreConfig
+from repro.storage.format import fsync_dir, sst_path
+from repro.storage.manifest import read_manifest
+from repro.storage.sstable_io import load_sstable
+
+__all__ = ["ShardedConfig", "ShardedStore", "load_shard_snapshot",
+           "merge_live"]
+
+TOPOLOGY = "SHARDS.json"
+_PAD_PROBE = -(1 << 62)
+
+
+@dataclasses.dataclass
+class ShardedConfig:
+    """Topology of a sharded store — fixed at creation and persisted, so
+    a reopen routes every key exactly as the writer did."""
+    n_shards: int = 2
+    # n_shards-1 ascending split keys; shard i owns [splits[i-1], splits[i])
+    boundaries: tuple | None = None
+    key_lo: int = 0               # uniform-split fallback domain
+    key_hi: int = 1 << 62
+    delta: int = 8                # dist-plane PLR error bound
+
+    def splits(self) -> tuple:
+        if self.boundaries is not None:
+            b = tuple(int(x) for x in self.boundaries)
+            if (len(b) != self.n_shards - 1
+                    or any(x >= y for x, y in zip(b, b[1:]))):
+                raise ValueError(
+                    f"boundaries must be {self.n_shards - 1} strictly "
+                    f"ascending split keys, got {b}")
+            return b
+        span = self.key_hi - self.key_lo
+        return tuple(self.key_lo + span * (i + 1) // self.n_shards
+                     for i in range(self.n_shards - 1))
+
+
+def _store_cfg_to_dict(cfg: StoreConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    d.pop("storage_dir", None)   # assigned per shard directory
+    return d
+
+
+def _store_cfg_from_dict(d: dict) -> StoreConfig:
+    d = dict(d)
+    nested = {"lsm": LSMConfig, "engine": EngineConfig, "cba": CBAConfig,
+              "costs": CostModel, "maintenance": MaintenanceConfig}
+    for key, cls in nested.items():
+        d[key] = cls(**d[key])
+    return StoreConfig(**d)
+
+
+def merge_live(tables) -> tuple[np.ndarray, np.ndarray]:
+    """Newest-seq-wins merge of a shard's live sstables into one sorted
+    (keys, vptrs) snapshot, shadowed versions and tombstones dropped —
+    the immutable "level" the distributed read path serves."""
+    if not tables:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    keys = np.concatenate([t.keys for t in tables])
+    seqs = np.concatenate([t.seqs for t in tables])
+    vptrs = np.concatenate([t.vptrs for t in tables])
+    order = np.lexsort((seqs, keys))
+    k, v = keys[order], vptrs[order]
+    last = np.r_[k[1:] != k[:-1], True]   # newest version of each key
+    k, v = k[last], v[last]
+    live = v >= 0
+    return np.ascontiguousarray(k[live]), np.ascontiguousarray(v[live])
+
+
+def load_shard_snapshot(shard_dir: str,
+                        verify: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """Shard snapshot straight from disk: MANIFEST replay names the live
+    sstables, ``sstable_io`` mmaps them, and the merge yields the same
+    (keys, vptrs) arrays a live store's tree would.  Read-only — no lock,
+    no WAL replay (unflushed records are the memtable's business), no
+    garbage sweep — so it is safe to point at a directory mid-crash."""
+    got = read_manifest(shard_dir)
+    if got is None:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    state, _ = got
+    tables = [load_sstable(sst_path(shard_dir, fid), verify=verify)
+              for fid in sorted(state.live)]
+    return merge_live(tables)
+
+
+class ShardedStore:
+    """Range-partitioned Bourbon store: durable shards + shard_map GETs."""
+
+    def __init__(self, path: str, splits: tuple, shards: list,
+                 delta: int, mesh) -> None:
+        self.path = path
+        self.shards = shards
+        self.delta = delta
+        self._splits = np.asarray(splits, np.int64)
+        self._mesh = mesh
+        self._get_fn = None
+        self._snaps = [None] * len(shards)
+        self._snap_models = [None] * len(shards)
+        self._snap_epochs = [-1] * len(shards)
+        self._state = None
+        self._state_epochs = None
+        self.state_epoch = 0          # bumps whenever the device state refreshes
+        self.n_gets = 0
+
+    # ------------------------------------------------------------- lifecycle
+    @classmethod
+    def open(cls, path, scfg: ShardedConfig | None = None,
+             store_cfg: StoreConfig | None = None,
+             mesh="auto") -> "ShardedStore":
+        """Open (or create) a sharded store rooted at ``path``.
+
+        A fresh directory records the topology AND the per-shard store
+        config in ``SHARDS.json`` (atomic write) and creates
+        ``shard-<i>/`` per partition; an existing one reopens from its
+        directories alone — the persisted config restores the store
+        geometry, every shard recovers through the engine's normal
+        protocol (WAL into memtable, sstables with their persisted file
+        models, level models via the MANIFEST) — rejecting a mismatched
+        shard count.  ``mesh="auto"`` builds an n_shards-device mesh for
+        the shard_map GET when the host has enough devices, else the GET
+        runs the same shard kernel host-side."""
+        path = str(path)
+        os.makedirs(path, exist_ok=True)
+        topo_path = os.path.join(path, TOPOLOGY)
+        if os.path.exists(topo_path):
+            with open(topo_path) as f:
+                topo = json.load(f)
+            n_shards = topo["n_shards"]
+            splits = tuple(topo["splits"])
+            delta = topo["delta"]
+            if scfg is not None:
+                # the topology is fixed at creation: reject any mismatch
+                # instead of silently routing by the persisted values
+                if scfg.n_shards != n_shards:
+                    raise ValueError(
+                        f"store at {path!r} has {n_shards} shards; "
+                        f"refusing to open with n_shards={scfg.n_shards}")
+                if (scfg.boundaries is not None
+                        and tuple(int(b) for b in scfg.boundaries) != splits):
+                    raise ValueError(
+                        f"store at {path!r} was partitioned at {splits}; "
+                        f"refusing to open with different boundaries")
+                if scfg.delta != delta:
+                    raise ValueError(
+                        f"store at {path!r} uses dist-plane delta={delta}; "
+                        f"refusing to open with delta={scfg.delta}")
+            if store_cfg is None:
+                store_cfg = _store_cfg_from_dict(topo["store_cfg"])
+        else:
+            if os.path.exists(os.path.join(path, "shard-0")):
+                # shard directories without their topology (lost or
+                # never-durable SHARDS.json): re-creating with defaults
+                # would silently orphan shards and re-route live keys
+                raise RuntimeError(
+                    f"{path!r} holds shard directories but no {TOPOLOGY}; "
+                    f"refusing to re-create the topology over live data")
+            scfg = scfg if scfg is not None else ShardedConfig()
+            n_shards, delta = scfg.n_shards, scfg.delta
+            splits = scfg.splits()
+            store_cfg = store_cfg if store_cfg is not None else StoreConfig()
+            tmp = topo_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"n_shards": n_shards, "splits": list(splits),
+                           "delta": delta,
+                           "store_cfg": _store_cfg_to_dict(store_cfg)}, f)
+                if store_cfg.fsync:   # routing must survive power loss too
+                    f.flush()
+                    os.fsync(f.fileno())
+            os.replace(tmp, topo_path)
+            if store_cfg.fsync:
+                fsync_dir(path)
+        shards: list[BourbonStore] = []
+        try:
+            for i in range(n_shards):
+                shards.append(BourbonStore.open(
+                    os.path.join(path, f"shard-{i}"), store_cfg))
+        except BaseException:
+            for st in shards:   # release the directory locks already taken
+                st.close()
+            raise
+        if mesh == "auto":
+            mesh = None
+            if len(jax.devices()) >= n_shards:
+                try:
+                    mesh = make_mesh((n_shards,), ("shard",),
+                                     axis_type="Explicit")
+                except Exception:
+                    mesh = None
+        return cls(path, splits, shards, delta, mesh)
+
+    def close(self) -> None:
+        for st in self.shards:
+            st.close()
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def uses_shard_map(self) -> bool:
+        return self._mesh is not None
+
+    # ----------------------------------------------------------------- write
+    def shard_of(self, keys: np.ndarray) -> np.ndarray:
+        """Owning shard per key — total (out-of-range keys clamp to the
+        first/last partition), so every key is always routable."""
+        return np.searchsorted(self._splits, np.asarray(keys, np.int64),
+                               side="right").astype(np.int32)
+
+    def put_batch(self, keys: np.ndarray,
+                  values: np.ndarray | None = None) -> None:
+        keys = np.asarray(keys, np.int64)
+        owner = self.shard_of(keys)
+        for i, st in enumerate(self.shards):
+            mask = owner == i
+            if mask.any():
+                st.put_batch(keys[mask],
+                             None if values is None else values[mask])
+
+    def delete_batch(self, keys: np.ndarray) -> None:
+        keys = np.asarray(keys, np.int64)
+        owner = self.shard_of(keys)
+        for i, st in enumerate(self.shards):
+            mask = owner == i
+            if mask.any():
+                st.delete_batch(keys[mask])
+
+    def flush_all(self) -> None:
+        for st in self.shards:
+            st.flush_all()
+
+    def learn_all(self) -> int:
+        return sum(st.learn_all() for st in self.shards)
+
+    def drain_learning(self, max_us: float = 1e12) -> int:
+        return sum(st.drain_learning(max_us) for st in self.shards)
+
+    def gc_value_log(self, **kw) -> dict:
+        out = {"segments_removed": 0, "bytes_reclaimed": 0,
+               "entries_moved": 0}
+        for st in self.shards:
+            res = st.gc_value_log(**kw)
+            for k in out:
+                out[k] += res[k]
+        return out
+
+    # -------------------------------------------------------------- snapshot
+    def _shard_epochs(self) -> tuple:
+        # one flush/compaction event = one structural change: the exact
+        # moments a shard's memtable rolls into a new immutable snapshot
+        return tuple(len(st.tree.events) for st in self.shards)
+
+    def device_state(self) -> dict:
+        """The stacked (n_shards, ...) device state.  Snapshots AND their
+        fitted PLR models are cached per shard epoch, so a refresh merges
+        and refits only the shards whose memtable actually rolled.  The
+        restack/upload still copies every row (O(total records) bytes per
+        refresh); updating only the changed device row is the next
+        optimization if flush-heavy workloads make it show up."""
+        epochs = self._shard_epochs()
+        if self._state is None or epochs != self._state_epochs:
+            for i, st in enumerate(self.shards):
+                if self._snap_epochs[i] != epochs[i]:
+                    self._snaps[i] = merge_live(list(st.tree.all_files()))
+                    self._snap_models[i] = (
+                        greedy_plr_np(self._snaps[i][0], delta=self.delta)
+                        if self._snaps[i][0].shape[0] else None)
+                    self._snap_epochs[i] = epochs[i]
+            state_np = build_dist_state_from_shards(
+                self._snaps, self.delta, models=self._snap_models)
+            self._state = {k: jnp.asarray(v) for k, v in state_np.items()}
+            self._state_epochs = epochs
+            self.state_epoch += 1
+        return self._state
+
+    # ------------------------------------------------------------------ read
+    def _dist_lookup(self, probes: np.ndarray):
+        state = self.device_state()
+        n = probes.shape[0]
+        if self._mesh is not None:
+            if self._get_fn is None:
+                cfg = DistStoreConfig(n_keys=0, probe_batch=0,
+                                      delta=self.delta)
+                self._get_fn = build_dist_get(self._mesh, cfg)
+            pad = next_pow2(max(n, 64))
+            pad = -(-pad // self.n_shards) * self.n_shards
+            buf = np.full(pad, _PAD_PROBE, np.int64)
+            buf[:n] = probes
+            with set_mesh(self._mesh):
+                f, v = self._get_fn(state, jnp.asarray(buf))
+            return np.asarray(f)[:n], np.asarray(v)[:n]
+        # host fallback: the same shard kernel, one shard row at a time
+        found = np.zeros(n, bool)
+        vptr = np.full(n, -1, np.int64)
+        jp = jnp.asarray(probes)
+        for s in range(self.n_shards):
+            shard = {k: v[s: s + 1] for k, v in state.items()}
+            h, vv = dist_get_local(shard, jp, self.delta)
+            h = np.asarray(h)
+            vptr[h] = np.asarray(vv)[h]
+            found |= h
+        return found, vptr
+
+    def get_batch(self, probes: np.ndarray, with_values: bool = False):
+        """Batched GET: per-shard memtable overlay (newest data wins,
+        tombstones shadow), then the snapshot path for the rest.  Returns
+        (found, shard-local vptrs) or (found, values)."""
+        probes = np.asarray(probes, np.int64)
+        B = probes.shape[0]
+        owner = self.shard_of(probes)
+        vptr = np.full(B, -1, np.int64)
+        mt_hit = np.zeros(B, bool)
+        for i, st in enumerate(self.shards):
+            idx = np.nonzero(owner == i)[0]
+            if idx.shape[0] == 0:
+                continue
+            f, v = st.memtable.get_batch(probes[idx])
+            mt_hit[idx[f]] = True
+            vptr[idx[f]] = v[f]
+        found = mt_hit.copy()
+        miss = ~mt_hit
+        if miss.any():
+            f2, v2 = self._dist_lookup(probes[miss])
+            found[miss] = f2
+            vptr[miss] = np.where(f2, v2, -1)
+        found &= vptr >= 0     # located tombstones report not-found
+        self.n_gets += B
+        if with_values:
+            value_size = self.shards[0].cfg.value_size
+            vals = np.zeros((B, value_size), np.uint8)
+            for i, st in enumerate(self.shards):
+                sel = found & (owner == i)
+                if sel.any():
+                    vals[sel] = st.vlog.get_batch_np(vptr[sel])
+            return found, vals
+        return found, vptr
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        per = [st.stats() for st in self.shards]
+        agg = {
+            "n_shards": self.n_shards,
+            "state_epoch": self.state_epoch,
+            "uses_shard_map": self.uses_shard_map,
+            "n_records": sum(p["n_records"] for p in per),
+            "n_files": sum(p["n_files"] for p in per),
+            "files_learned": sum(p["files_learned"] for p in per),
+            "models_recovered": sum(p.get("models_recovered", 0)
+                                    for p in per),
+            "level_models_recovered": sum(
+                p.get("level_models_recovered", 0) for p in per),
+            "shards": per,
+        }
+        return agg

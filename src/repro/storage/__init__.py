@@ -7,13 +7,14 @@ from .engine import StorageEngine
 from .manifest import (ManifestState, ManifestWriter, checkpoint_edit,
                        read_manifest, set_current)
 from .recovery import load_tables
-from .sstable_io import append_model, load_sstable, write_sstable
+from .sstable_io import (append_model, load_level_model, load_sstable,
+                         write_level_model, write_sstable)
 from .vlog import DurableValueLog
 from .wal import WALWriter, replay_wal
 
 __all__ = [
     "StorageEngine", "ManifestState", "ManifestWriter", "checkpoint_edit",
     "read_manifest", "set_current", "load_tables", "append_model",
-    "load_sstable", "write_sstable", "DurableValueLog", "WALWriter",
-    "replay_wal",
+    "load_sstable", "write_sstable", "load_level_model", "write_level_model",
+    "DurableValueLog", "WALWriter", "replay_wal",
 ]

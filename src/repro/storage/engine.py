@@ -24,10 +24,10 @@ import os
 
 import numpy as np
 
-from .format import fsync_dir, manifest_name, sst_path, wal_path
+from .format import fsync_dir, lmodel_path, manifest_name, sst_path, wal_path
 from .manifest import (ManifestState, ManifestWriter, checkpoint_edit,
                        read_manifest, set_current)
-from .sstable_io import append_model, write_sstable
+from .sstable_io import append_model, write_level_model, write_sstable
 from .wal import WALWriter, replay_wal
 
 __all__ = ["StorageEngine"]
@@ -262,6 +262,33 @@ class StorageEngine:
         append_model(sst_path(self.dir, table.file_id), table.model,
                      self.fsync)
         self.persisted_models.add(table.file_id)
+
+    def persist_level_model(self, level: int, model) -> None:
+        """Durably publish a level-granularity model (§4.3): the sidecar
+        file is fully written first, then the MANIFEST ``lmodel`` edit
+        names it — so a torn edit leaves an orphan sidecar (swept on the
+        next open) rather than a referenced-but-missing model.  The
+        superseded sidecar is deleted only after the new edit landed."""
+        epoch = int(model.epoch)
+        write_level_model(lmodel_path(self.dir, level, epoch), model,
+                          self.fsync)
+        if self.fsync:
+            fsync_dir(self.dir)   # sidecar entry durable before the edit
+        old = self.state.level_models.get(level)
+        edit = {"lmodel": {str(level): epoch}}
+        self.manifest.append(edit)
+        self.state.apply(edit)
+        if old is not None and old != epoch:
+            self.drop_level_model(level, old)
+
+    def drop_level_model(self, level: int, epoch: int) -> None:
+        """Remove a superseded/invalidated sidecar.  The manifest stopped
+        referencing it already (new lmodel edit, or the add/del edit whose
+        replay drops the record), so this is pure garbage collection — a
+        crash beforehand just leaves a file the next open sweeps."""
+        path = lmodel_path(self.dir, level, epoch)
+        if os.path.exists(path):
+            os.unlink(path)
 
     # -------------------------------------------------------------------- gc
     def persist_gc(self, removed_segs: list[int], seq: int, clock: float,

@@ -24,7 +24,7 @@ import zlib
 __all__ = [
     "MAGIC_SST", "MAGIC_MODEL", "crc32", "write_frame", "read_frames",
     "valid_frames_end", "fsync_dir", "sst_path", "wal_path", "vlog_path",
-    "manifest_name", "CURRENT",
+    "lmodel_path", "manifest_name", "CURRENT", "FRAME_HDR_SIZE",
 ]
 
 MAGIC_SST = b"BRBNSST1"
@@ -32,6 +32,7 @@ MAGIC_MODEL = b"BRBNPLR1"
 CURRENT = "CURRENT"
 
 _FRAME_HDR = struct.Struct("<II")
+FRAME_HDR_SIZE = _FRAME_HDR.size
 
 
 def crc32(data: bytes) -> int:
@@ -89,6 +90,12 @@ def wal_path(dirpath: str, wal_no: int) -> str:
 
 def vlog_path(dirpath: str, seg: int) -> str:
     return os.path.join(dirpath, f"vlog-{seg:06d}.seg")
+
+
+def lmodel_path(dirpath: str, level: int, epoch: int) -> str:
+    """Sidecar holding a persisted level-granularity PLR model; the
+    MANIFEST ``lmodel`` record names the (level, epoch) pair that is live."""
+    return os.path.join(dirpath, f"lm-{level}-{epoch:06d}.plm")
 
 
 def manifest_name(no: int) -> str:

@@ -19,6 +19,13 @@ Each edit may carry::
                                         absolute per-segment counts — keeps
                                         ordinary edits O(changed), not
                                         O(total segments))
+    lmodel    {level: epoch}            level-granularity PLR model published
+                                        for a level; the segments live in the
+                                        ``lm-<level>-<epoch>.plm`` sidecar.
+                                        Any add/del touching a level drops its
+                                        record first (a structural change
+                                        invalidates the model), so replay
+                                        order alone decides validity.
 
 ``CURRENT`` names the live manifest file.  Replaying the edits in order
 yields the exact live-file set and counters; frames use the shared
@@ -38,8 +45,8 @@ import dataclasses
 import json
 import os
 
-from .format import (CURRENT, fsync_dir, manifest_name, read_frames,
-                     valid_frames_end, write_frame)
+from .format import (CURRENT, FRAME_HDR_SIZE, fsync_dir, manifest_name,
+                     read_frames, valid_frames_end, write_frame)
 
 __all__ = ["ManifestState", "ManifestWriter", "read_manifest",
            "checkpoint_edit", "set_current"]
@@ -57,6 +64,7 @@ class ManifestState:
     value_size: int | None = None   # vlog entry geometry, fixed at creation
     seg_slots: int | None = None
     plr_delta: int | None = None    # error bound the persisted models carry
+    level_models: dict = dataclasses.field(default_factory=dict)  # lvl -> epoch
 
     def apply(self, edit: dict) -> None:
         if "vsize" in edit:
@@ -65,10 +73,21 @@ class ManifestState:
             self.seg_slots = edit["vslots"]
         if "pdelta" in edit:
             self.plr_delta = edit["pdelta"]
+        # a structural change at a level invalidates its persisted level
+        # model; resolve deleted files to levels BEFORE popping them
+        touched = {self.live[fid] for fid in edit.get("del", [])
+                   if fid in self.live}
+        touched |= {level for _, level in edit.get("add", [])}
         for fid in edit.get("del", []):
             self.live.pop(fid, None)
         for fid, level in edit.get("add", []):
             self.live[fid] = level
+        for level in touched:
+            self.level_models.pop(level, None)
+        # applied after the invalidation so a checkpoint edit carrying both
+        # the full live set and the lmodel records keeps its models
+        for level, epoch in edit.get("lmodel", {}).items():
+            self.level_models[int(level)] = int(epoch)
         if "wal" in edit:
             self.wal_no = edit["wal"]
         if "seq" in edit:
@@ -113,7 +132,7 @@ class ManifestWriter:
         self._f.flush()
         if self.fsync:
             os.fsync(self._f.fileno())
-        self._size += 8 + len(payload)   # frame header + payload
+        self._size += FRAME_HDR_SIZE + len(payload)
 
     def size(self) -> int:
         """Bytes of valid edit log (drives checkpoint scheduling)."""
@@ -150,6 +169,9 @@ def checkpoint_edit(state: ManifestState) -> dict:
     if state.value_size is not None:
         edit.update(vsize=state.value_size, vslots=state.seg_slots,
                     pdelta=state.plr_delta)
+    if state.level_models:
+        edit["lmodel"] = {str(l): e
+                          for l, e in sorted(state.level_models.items())}
     return edit
 
 

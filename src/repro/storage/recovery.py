@@ -57,12 +57,18 @@ def load_tables(dirpath: str, state: ManifestState,
         advance_file_ids(max(state.live) + 1)
 
     # sweep unreferenced table files (crash between write and manifest
-    # edit) and orphaned .tmp files (crash before the atomic os.replace)
+    # edit), orphaned .tmp files (crash before the atomic os.replace), and
+    # level-model sidecars the manifest no longer names (superseded epoch,
+    # or an lmodel edit that tore before acknowledging the file)
     for name in os.listdir(dirpath):
         if name.endswith(".tmp"):
             os.unlink(os.path.join(dirpath, name))
         elif name.endswith(".sst"):
             fid = int(name.split(".")[0])
             if fid not in state.live:
+                os.unlink(os.path.join(dirpath, name))
+        elif name.startswith("lm-") and name.endswith(".plm"):
+            level, epoch = (int(p) for p in name[3:-4].split("-"))
+            if state.level_models.get(level) != epoch:
                 os.unlink(os.path.join(dirpath, name))
     return levels

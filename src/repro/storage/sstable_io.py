@@ -38,7 +38,8 @@ from repro.core.sstable import FileStats, SSTable
 
 from .format import MAGIC_MODEL, MAGIC_SST, crc32, fsync_dir, sst_path
 
-__all__ = ["write_sstable", "append_model", "load_sstable"]
+__all__ = ["write_sstable", "append_model", "load_sstable",
+           "write_level_model", "load_level_model"]
 
 _HDR = struct.Struct("<8sqiiqqqdIxxxxq")
 HEADER_SIZE = _HDR.size          # 72, a multiple of 8
@@ -103,6 +104,43 @@ def append_model(path: str, model: PLRModel, fsync: bool = False) -> None:
         f.flush()
         if fsync:
             os.fsync(f.fileno())
+
+
+def write_level_model(path: str, model: PLRModel, fsync: bool = False) -> None:
+    """Persist a level-granularity model as a standalone sidecar file —
+    the same model-block encoding that rides inside sstables, written via
+    tmp + ``os.replace`` so a reader never sees a partial file."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(_model_block(model))
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def load_level_model(path: str, verify: bool = True) -> PLRModel | None:
+    """Load a level-model sidecar; returns None when the file is missing,
+    torn, or fails its checksum — a level model is always recomputable, so
+    the caller falls back to relearning instead of refusing to open."""
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError:
+        return None
+    if len(data) < _MODEL_HDR.size:
+        return None
+    magic, ns, delta, mcrc = _MODEL_HDR.unpack_from(data, 0)
+    arrays = data[_MODEL_HDR.size: _MODEL_HDR.size + 3 * 8 * ns]
+    if (magic != MAGIC_MODEL or len(arrays) < 3 * 8 * ns
+            or (verify and crc32(arrays) != mcrc)):
+        return None
+    starts = np.frombuffer(arrays, np.float64, count=ns)
+    slopes = np.frombuffer(arrays, np.float64, count=ns, offset=8 * ns)
+    icepts = np.frombuffer(arrays, np.float64, count=ns, offset=16 * ns)
+    return PLRModel(jnp.asarray(starts), jnp.asarray(slopes),
+                    jnp.asarray(icepts), jnp.asarray(ns, jnp.int32),
+                    delta=delta)
 
 
 def load_sstable(path: str, verify: bool = True) -> SSTable:

@@ -1,0 +1,255 @@
+"""Level-granularity model persistence (§4.3 + the LearnedKV storage-
+coupling argument): MANIFEST ``lmodel`` records + ``lm-*.plm`` sidecars,
+reopen serving the model path with an empty learn queue, torn-edit
+fallback to relearning, and the epoch-keyed engine cache."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import BourbonStore, LSMConfig, StoreConfig
+from repro.core.engine import EngineConfig, LookupEngine
+from repro.core.lsm import LSMTree, N_LEVELS
+from repro.core.plr import greedy_plr_np
+from repro.core.sstable import build_sstable
+
+
+def level_cfg(**kw):
+    defaults = dict(granularity="level", policy="always", value_size=16,
+                    lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                                  l1_cap_records=1 << 13),
+                    engine=EngineConfig(seg_cap=4096))
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def _load(st: BourbonStore, keys: np.ndarray) -> None:
+    for off in range(0, keys.shape[0], 4096):
+        st.put_batch(keys[off: off + 4096])
+    st.flush_all()
+
+
+# ----------------------------------------------------------- manifest schema
+
+def test_manifest_lmodel_record_and_invalidation():
+    from repro.storage import ManifestState, checkpoint_edit
+
+    state = ManifestState(live={})
+    state.apply({"add": [[1, 2]]})
+    state.apply({"lmodel": {"2": 5}})
+    assert state.level_models == {2: 5}
+    # any structural change at the level drops its record
+    state.apply({"add": [[3, 2]]})
+    assert state.level_models == {}
+    state.apply({"lmodel": {"2": 6}})
+    state.apply({"del": [1]})          # fid 1 lives at level 2
+    assert state.level_models == {}
+    # one edit carrying both: invalidation first, then the new record
+    state.apply({"lmodel": {"2": 7}, "add": [[9, 3]]})
+    assert state.level_models == {2: 7}
+    # a checkpoint edit replays to the identical state from scratch
+    replayed = ManifestState(live={})
+    replayed.apply(checkpoint_edit(state))
+    assert replayed.level_models == {2: 7}
+    assert replayed.live == state.live
+
+
+def test_level_model_sidecar_roundtrip(tmp_path):
+    from repro.storage import load_level_model, write_level_model
+
+    keys = np.cumsum(np.random.default_rng(0).integers(1, 9, 5000))
+    m = greedy_plr_np(keys, delta=8)
+    path = str(tmp_path / "lm-1-000003.plm")
+    write_level_model(path, m)
+    r = load_level_model(path)
+    assert int(r.n_segments) == int(m.n_segments)
+    np.testing.assert_allclose(np.asarray(r.slopes),
+                               np.asarray(m.slopes)[:int(m.n_segments)])
+    # torn sidecar: never an error, always "relearn"
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    assert load_level_model(path) is None
+    assert load_level_model(str(tmp_path / "missing.plm")) is None
+
+
+# ---------------------------------------------------------------- round trip
+
+def test_reopen_serves_level_models_with_empty_learn_queue(tmp_path):
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, level_cfg())
+    keys = np.random.default_rng(2).permutation(
+        np.arange(1, 20001, dtype=np.int64) * 3)
+    _load(st, keys)
+    st.learn_all()     # level models + L0 file models, all persisted
+    st.close()
+
+    st2 = BourbonStore.open(d, level_cfg())
+    # the whole point: nothing queued, nothing running, nothing relearned
+    assert not st2.executor.queue and not st2.executor.running
+    s = st2.stats()
+    assert s["level_models_recovered"] >= 1
+    assert s["files_learned"] == 0
+    nonempty = [i for i in range(1, N_LEVELS) if st2.tree.levels[i]]
+    assert nonempty
+    assert all(st2.level_models[i] is not None for i in nonempty)
+    # first GET is model-pure: every lookup takes the model path and no
+    # learning job ever entered the pipeline
+    f, _ = st2.get_batch(keys[:4096])
+    assert f.all()
+    miss, _ = st2.get_batch(keys[:4096] + 1)
+    assert not miss.any()
+    assert st2.executor.jobs_done == 0
+    assert st2.lookups_baseline_path == 0
+    assert st2.lookups_model_path > 0
+    st2.close()
+
+
+def test_async_fit_level_models_persist_across_crash(tmp_path):
+    """Models fit by the executor (not learn_all) are swept into the
+    MANIFEST by _tick; a hard crash afterwards must not lose them."""
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, level_cfg())
+    keys = np.random.default_rng(3).permutation(
+        np.arange(1, 16001, dtype=np.int64) * 5)
+    _load(st, keys)
+    st.drain_learning()
+    fitted = [i for i in range(1, N_LEVELS)
+              if st.level_models[i] is not None]
+    assert fitted
+    del st  # crash: no close
+
+    st2 = BourbonStore.open(d, level_cfg())
+    assert all(st2.level_models[i] is not None for i in fitted)
+    assert st2.stats()["level_models_recovered"] >= len(fitted)
+    assert not st2.executor.queue and not st2.executor.running
+    f, _ = st2.get_batch(keys[:4096])
+    assert f.all()
+    assert st2.executor.jobs_done == 0
+    st2.close()
+
+
+# ------------------------------------------------------------ torn recovery
+
+def test_torn_lmodel_manifest_edit_falls_back_to_relearning(tmp_path):
+    """learn_all's lmodel edits are the manifest tail after a crash;
+    tearing the last frame must drop (only) that level's model and
+    resubmit its learning job on reopen."""
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, level_cfg())
+    keys = np.random.default_rng(4).permutation(
+        np.arange(1, 20001, dtype=np.int64) * 3)
+    _load(st, keys)
+    st.learn_all()
+    nonempty = [i for i in range(1, N_LEVELS) if st.tree.levels[i]]
+    del st  # crash
+
+    mpath = [os.path.join(d, n) for n in os.listdir(d)
+             if n.startswith("MANIFEST")][0]
+    with open(mpath, "r+b") as f:      # tear the trailing lmodel frame
+        f.truncate(os.path.getsize(mpath) - 3)
+
+    st2 = BourbonStore.open(d, level_cfg())
+    # the torn level relearns; reads stay correct before and after
+    missing = [i for i in nonempty if st2.level_models[i] is None]
+    assert missing
+    assert {j.level for j in st2.executor.queue
+            if j.is_level} >= set(missing)
+    f, _ = st2.get_batch(keys[:4096])
+    assert f.all()
+    st2.drain_learning()
+    assert all(st2.level_models[i] is not None for i in nonempty)
+    f, _ = st2.get_batch(keys[4096:8192])
+    assert f.all()
+    st2.close()
+
+
+def test_torn_lmodel_sidecar_falls_back_to_relearning(tmp_path):
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, level_cfg())
+    keys = np.random.default_rng(5).permutation(
+        np.arange(1, 20001, dtype=np.int64) * 7)
+    _load(st, keys)
+    st.learn_all()
+    st.close()
+    sidecars = sorted(n for n in os.listdir(d) if n.endswith(".plm"))
+    assert sidecars
+    victim = os.path.join(d, sidecars[0])
+    with open(victim, "r+b") as f:     # torn write: half the model block
+        f.truncate(os.path.getsize(victim) // 2)
+    torn_level = int(sidecars[0].split("-")[1])
+
+    st2 = BourbonStore.open(d, level_cfg())
+    assert st2.level_models[torn_level] is None
+    assert any(j.level == torn_level for j in st2.executor.queue
+               if j.is_level)
+    f, _ = st2.get_batch(keys[:4096])
+    assert f.all()
+    st2.drain_learning()
+    assert st2.level_models[torn_level] is not None
+    st2.close()
+
+
+def test_structure_change_invalidates_persisted_level_model(tmp_path):
+    """A flush/compaction after the lmodel edit must drop the record (and
+    sweep the sidecar) so the next reopen relearns instead of serving a
+    model fit over a different file set."""
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, level_cfg())
+    keys = np.random.default_rng(6).permutation(
+        np.arange(1, 20001, dtype=np.int64) * 9)
+    _load(st, keys[:16000])
+    st.learn_all()
+    changed_before = set(st._lm_persisted)
+    _load(st, keys[16000:])            # structural change -> invalidation
+    st.close()
+
+    st2 = BourbonStore.open(d, level_cfg())
+    s = st2.stats()
+    # whatever levels the second load touched lost their persisted models
+    touched = changed_before - set(st2._lm_persisted)
+    assert touched
+    for i in touched:
+        assert st2.level_models[i] is None
+    st2.drain_learning()
+    f, _ = st2.get_batch(keys[:8192])
+    assert f.all()
+    st2.close()
+
+
+# ------------------------------------------------------------- engine cache
+
+def test_engine_level_model_cache_keyed_on_epoch():
+    """Same level version + different model object must rebuild the
+    cached LevelModel — (ver, id(model)) could collide after GC reuses
+    the address; the monotonic epoch cannot."""
+    tree = LSMTree(LSMConfig())
+    rng = np.random.default_rng(7)
+    keys = np.cumsum(rng.integers(1, 50, 4096)).astype(np.int64)
+    n = keys.shape[0]
+    t = build_sstable(keys, np.arange(n, dtype=np.int64),
+                      np.arange(n, dtype=np.int64), 1, 0.0)
+    tree.levels[1] = [t]
+    eng = LookupEngine(EngineConfig())
+    lms = [None] * N_LEVELS
+    m1 = greedy_plr_np(keys, delta=8)
+    m1.epoch = 0
+    lms[1] = m1
+    s1 = eng.build_state(tree, lms)
+    assert int(s1.level_models[1].nseg) == int(m1.n_segments)
+    # swap in a different model at the same level version
+    m2 = greedy_plr_np(keys[: n // 8], delta=8)
+    m2.epoch = 1
+    lms[1] = m2
+    s2 = eng.build_state(tree, lms)
+    assert int(s2.level_models[1].nseg) == int(m2.n_segments)
+    assert int(s2.level_models[1].nseg) != int(m1.n_segments)
+    # unstamped models get engine-assigned unique (negative) epochs
+    m3 = greedy_plr_np(keys[: n // 2], delta=8)
+    lms[1] = m3
+    s3 = eng.build_state(tree, lms)
+    assert int(s3.level_models[1].nseg) == int(m3.n_segments)
+    assert m3.epoch < -1
+    # the same object is a cache hit (no rebuild)
+    s4 = eng.build_state(tree, lms)
+    assert s4.level_models[1] is s3.level_models[1]

@@ -400,21 +400,25 @@ def test_second_open_of_live_store_refused(tmp_path):
     st2.close()
 
 
-def test_level_granularity_relearns_after_reopen(tmp_path):
-    """Level models aren't persisted; a reopened level-granularity store
-    must resubmit the learning jobs rather than serve baseline forever."""
+def test_level_granularity_survives_reopen(tmp_path):
+    """Level models fit before close are persisted (MANIFEST ``lmodel``
+    record + sidecar) and reload without relearning; levels whose model
+    never landed resubmit their learning jobs.  See test_level_models.py
+    for the full persistence matrix."""
     d = str(tmp_path / "db")
     cfg = small_cfg(granularity="level", policy="always")
     st = BourbonStore.open(d, cfg)
     ks = np.arange(1, 20001, dtype=np.int64) * 3
     st.put_batch(ks, _values_for(ks, 0))
     st.flush_all()
+    st.drain_learning()
+    fitted = [i for i in range(1, 7) if st.level_models[i] is not None]
     st.close()
     st2 = BourbonStore.open(d, small_cfg(granularity="level",
                                          policy="always"))
     assert any(st2.tree.levels[i] for i in range(1, 7))
-    st2.drain_learning()
-    assert any(m is not None for m in st2.level_models)
+    assert fitted and all(st2.level_models[i] is not None for i in fitted)
+    assert st2.drain_learning() == 0   # nothing left to relearn
     f, _ = st2.get_batch(ks[:4096])
     assert f.all()
     st2.close()
