@@ -1,0 +1,251 @@
+"""Serving front-end benchmark (suite ``serve``).
+
+Part A — request serving: C closed-loop clients each keep one small GET
+outstanding against a sharded store.  The **batched** path runs them
+through :class:`repro.server.BourbonServer` (queue -> coalesce/dedup ->
+HotKeyCache -> one snapshot-consistent multi-get per batch); the
+**naive** path answers each request with its own ``get_batch`` call, the
+way a client of the bare ``ShardedStore`` drives it today.  Reported per
+path: throughput (requests/s), p50/p99 request wall latency, and the
+cache hit rate — the LearnedKV-style end-to-end argument that the
+serving layer, not the microbenchmark, decides what the learned index
+is worth.
+
+Part B — fleet maintenance: an update-heavy stream (sustained
+overwrites) drives value-log GC on every shard.  Uncoordinated, each
+shard's MaintenanceScheduler fires from its own write ticks and the
+fleet can stall together; with the :class:`FleetMaintenanceCoordinator`
+the same work is staggered round-robin under a per-tick virtual-clock
+budget.  Reported: the worst single-tick maintenance charge (the stall
+metric) and the reclamation achieved — coordination must bound the
+former without giving up the latter.  Reclamation is compared on the
+**final value-log footprint** (space actually held at quiesce), not raw
+bytes_reclaimed: eager uncoordinated GC relocates live entries that the
+next overwrite round kills, so it re-reclaims the same logical space
+through its own churn and inflates the raw counter (the `moved=`
+numbers make the effect visible).
+
+``REPRO_BENCH_SMOKE=1`` shrinks everything so CI can run the whole loop
+in seconds.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import LSMConfig, StoreConfig
+from repro.core.engine import EngineConfig
+from repro.distributed import ShardedConfig, ShardedStore
+from repro.server import (BourbonServer, CoordinatorConfig, ServerConfig,
+                          ServerRequest)
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+N_KEYS = (1 << 13) if SMOKE else (1 << 15)
+CLIENTS = 64
+KEYS_PER_REQ = 8
+ROUNDS = 6 if SMOKE else 48           # requests per client (part A)
+W_ROUNDS = 8 if SMOKE else 12         # overwrite rounds (part B)
+VALUE_SIZE = 16
+BUDGET_US = 2048.0
+
+
+def _store_cfg() -> StoreConfig:
+    return StoreConfig(granularity="level", policy="always",
+                       value_size=VALUE_SIZE, vlog_seg_slots=1 << 9,
+                       lsm=LSMConfig(memtable_cap=1 << 11, file_cap=1 << 12,
+                                     l1_cap_records=1 << 14),
+                       engine=EngineConfig(seg_cap=4096))
+
+
+def _open_store(path: str, keys: np.ndarray, n_shards: int) -> ShardedStore:
+    bounds = tuple(int(b) for b in
+                   np.quantile(keys, np.arange(1, n_shards) / n_shards))
+    st = ShardedStore.open(path, ShardedConfig(n_shards=n_shards,
+                                               boundaries=bounds),
+                           _store_cfg())
+    return st
+
+
+def _load(st: ShardedStore, keys: np.ndarray) -> None:
+    for off in range(0, keys.shape[0], 1 << 12):
+        st.put_batch(keys[off: off + (1 << 12)])
+    st.flush_all()
+    st.learn_all()
+
+
+def _request_streams(keys: np.ndarray, seed: int) -> list[list[np.ndarray]]:
+    """Per-client request key arrays: 80% of probes from a hot 10% of the
+    keyspace (the HotKeyCache's reason to exist), 20% uniform."""
+    rng = np.random.default_rng(seed)
+    hot = keys[: max(keys.shape[0] // 10, KEYS_PER_REQ)]
+    streams = []
+    for _ in range(CLIENTS):
+        reqs = []
+        for _ in range(ROUNDS):
+            n_hot = int((rng.random(KEYS_PER_REQ) < 0.8).sum())
+            ks = np.concatenate([rng.choice(hot, n_hot),
+                                 rng.choice(keys, KEYS_PER_REQ - n_hot)])
+            reqs.append(ks.astype(np.int64))
+        streams.append(reqs)
+    return streams
+
+
+def _percentiles(lat_us: list[float]) -> tuple[float, float]:
+    a = np.asarray(lat_us)
+    return float(np.percentile(a, 50)), float(np.percentile(a, 99))
+
+
+def _run_batched(st: ShardedStore, streams) -> float:
+    srv = BourbonServer(st, ServerConfig(
+        max_batch_keys=1024, max_wait_ticks=1,
+        queue_capacity=2 * CLIENTS, coordinate_maintenance=True,
+        coordinator=CoordinatorConfig(budget_us_per_tick=BUDGET_US)))
+    nxt = [0] * CLIENTS               # next request index per client
+    pending: list[ServerRequest | None] = [None] * CLIENTS
+    lat: list[float] = []
+    total = CLIENTS * ROUNDS
+    served = 0
+    rid = 0
+    t_start = time.perf_counter()
+    while served < total:
+        for c in range(CLIENTS):
+            if pending[c] is not None or nxt[c] >= ROUNDS:
+                continue
+            r = ServerRequest(rid, "get", streams[c][nxt[c]])
+            r._t0 = time.perf_counter()
+            if srv.submit(r):         # full queue = backpressure: retry
+                rid += 1
+                pending[c] = r
+                nxt[c] += 1
+        srv.tick()
+        now = time.perf_counter()
+        for c in range(CLIENTS):
+            r = pending[c]
+            if r is not None and r.done:
+                lat.append((now - r._t0) * 1e6)
+                pending[c] = None
+                served += 1
+    dt = time.perf_counter() - t_start
+    p50, p99 = _percentiles(lat)
+    s = srv.stats()
+    hit = s["cache"]["hit_rate"]
+    emit(f"serve/batched.c{CLIENTS}", dt / total * 1e6,
+         f"reqs_per_s={total / dt:.0f} p50_us={p50:.0f} p99_us={p99:.0f} "
+         f"cache_hit={hit:.2f} batches={s['batches']} "
+         f"dedup={1 - s['batch_keys'] / max(s['request_keys'], 1):.2f} "
+         f"rejected={s['rejected']}")
+    return total / dt
+
+
+def _run_naive(st: ShardedStore, streams) -> float:
+    """One store call per request, FIFO over clients — no queue, no
+    coalescing, no cache: the pre-server client experience."""
+    lat: list[float] = []
+    total = CLIENTS * ROUNDS
+    t_start = time.perf_counter()
+    for i in range(ROUNDS):
+        for c in range(CLIENTS):
+            t0 = time.perf_counter()
+            st.get_batch(streams[c][i], with_values=True)
+            lat.append((time.perf_counter() - t0) * 1e6)
+    dt = time.perf_counter() - t_start
+    p50, p99 = _percentiles(lat)
+    emit(f"serve/naive.c{CLIENTS}", dt / total * 1e6,
+         f"reqs_per_s={total / dt:.0f} p50_us={p50:.0f} p99_us={p99:.0f}")
+    return total / dt
+
+
+def _overwrite_stream(keys: np.ndarray, seed: int) -> list[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return [rng.permutation(keys) for _ in range(4)]
+
+
+def _run_fleet(name: str, coordinate: bool, keys, order) -> int:
+    d = tempfile.mkdtemp(prefix=f"bourbon_serve_{name}_")
+    try:
+        st = _open_store(os.path.join(d, "db"), keys, n_shards=4)
+        srv = BourbonServer(st, ServerConfig(
+            max_batch_keys=1024, max_wait_ticks=0, queue_capacity=64,
+            coordinate_maintenance=coordinate,
+            coordinator=CoordinatorConfig(budget_us_per_tick=BUDGET_US,
+                                          max_shards_per_tick=1)))
+        rid = 0
+        t0 = time.perf_counter()
+        for rnd in range(W_ROUNDS):
+            hot = order[rnd % len(order)]
+            for off in range(0, hot.shape[0], 1 << 10):
+                srv.submit(ServerRequest(rid, "put",
+                                         hot[off: off + (1 << 10)]))
+                rid += 1
+                srv.run_until_drained()
+        # drain deferred maintenance: idle ticks advance the virtual
+        # clocks (T_waits expire), so keep ticking until reclamation
+        # stops moving for a while
+        quiet = 0
+        seen = -1
+        for _ in range(8000):
+            srv.tick()
+            got = sum(sh.auto_gc_stats["segments_removed"]
+                      for sh in st.shards)
+            quiet = quiet + 1 if got == seen else 0
+            seen = got
+            if quiet >= 256:
+                break
+        wall = time.perf_counter() - t0
+        s = srv.stats()
+        agg = s["store"]
+        extra = ""
+        if coordinate:
+            co = s["coordinator"]
+            extra = (f" budget_us={BUDGET_US:.0f} "
+                     f"within_budget={s['max_maintenance_tick_us'] <= BUDGET_US} "
+                     f"gc_deferred={co['gc_deferred']}")
+        emit(f"serve/fleet.{name}", s["max_maintenance_tick_us"],
+             f"final_vlog_bytes={agg['vlog_disk_bytes']} "
+             f"reclaimed_bytes={agg['auto_gc']['bytes_reclaimed']} "
+             f"segments={agg['vlog_segments_removed']} "
+             f"moved={agg['auto_gc']['entries_moved']} "
+             f"checkpoints={agg['manifest_checkpoints']} "
+             f"wall_s={wall:.1f}{extra}")
+        st.close()
+        return agg["vlog_disk_bytes"]
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def run() -> None:
+    rng = np.random.default_rng(1)
+    keys = rng.permutation(np.arange(1, N_KEYS + 1, dtype=np.int64) * 7)
+
+    # part A: batched front end vs naive per-request loop (read-heavy)
+    d = tempfile.mkdtemp(prefix="bourbon_serve_ab_")
+    try:
+        st = _open_store(os.path.join(d, "db"), keys, n_shards=2)
+        _load(st, keys)
+        streams = _request_streams(keys, seed=2)
+        naive = _run_naive(st, streams)
+        batched = _run_batched(st, streams)
+        emit("serve/speedup", 0.0,
+             f"batched_over_naive={batched / naive:.2f}x "
+             f"clients={CLIENTS} keys_per_req={KEYS_PER_REQ}")
+        st.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    # part B: fleet-stall time with vs without the coordinator
+    wkeys = keys[: N_KEYS // 2]
+    order = _overwrite_stream(wkeys, seed=3)
+    base = _run_fleet("uncoordinated", False, wkeys, order)
+    coord = _run_fleet("coordinated", True, wkeys, order)
+    # space still held at quiesce: coordinated must match (within 10%)
+    # what the uncoordinated fleet achieved
+    ratio = coord / max(base, 1)
+    emit("serve/fleet.space_ratio", 0.0,
+         f"coordinated_over_uncoordinated={ratio:.3f} "
+         f"within_10pct={abs(ratio - 1.0) <= 0.10}")

@@ -30,6 +30,10 @@ SUITES = {
     "dist_recovery": ("bench_dist_recovery",
                       "sharded store killed mid-write: reopen from shard "
                       "dirs vs rebuild from scratch"),
+    "serve": ("bench_serve",
+              "batched request-serving front end vs naive per-request "
+              "loop; fleet-stall time with vs without the maintenance "
+              "coordinator"),
 }
 
 

@@ -25,3 +25,13 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 # (smoke scale; reports reopen-from-disk vs rebuild-from-scratch)
 REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run dist_recovery
+
+# serving front end: the server tests (admission, HotKeyCache
+# invalidation, fleet maintenance coordination) run in the tier-1 suite
+# above; re-run them standalone so a serving regression is named, then
+# the smoke serve benchmark (batched vs naive throughput, fleet-stall
+# with vs without the coordinator)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_server.py
+REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run serve

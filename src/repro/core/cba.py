@@ -180,8 +180,11 @@ class MaintenanceScheduler(CostBenefitAnalyzer):
         self._next_scan_at = 0.0
         self.gc_runs = 0
         self.gc_us = 0.0            # virtual time spent collecting
+        self.gc_deferred = 0        # profitable segs pushed to a later tick
+        self.last_plan_cost_us = 0.0  # estimated cost of the last candidate set
         self.checkpoints = 0
         self.checkpoint_us = 0.0
+        self.checkpoint_overruns = 0  # folds too big for any tick budget
 
     def gc_t_wait(self, seg_slots: int) -> float:
         if self.mcfg.gc_t_wait_us is not None:
@@ -195,10 +198,20 @@ class MaintenanceScheduler(CostBenefitAnalyzer):
     def gc_benefit(self, n_dead: int, entry_size: int) -> float:
         return self.costs.b_gc(n_dead * entry_size)
 
-    def gc_candidates(self, vlog, now: float) -> list[int]:
+    def gc_candidates(self, vlog, now: float,
+                      budget_us: float | None = None) -> list[int]:
         """Profitable sealed segments, best (B - C) first, capped at
         ``gc_max_segments_per_tick``.  Pure estimate — no file I/O, and
-        the per-segment loop runs only when something could have changed."""
+        the per-segment loop runs only when something could have changed.
+
+        ``budget_us`` caps the *estimated* collection cost of the whole
+        candidate set (the fleet coordinator's per-tick budget).  The
+        estimate is conservative — dead counts only ever undercount, so
+        estimated relocation work bounds the real thing from above —
+        which makes the budget a hard ceiling on the virtual time the
+        collection can actually charge.  Profitable segments that don't
+        fit re-arm the change gate so the next tick reconsiders them
+        instead of waiting for their dead counts to move again."""
         n_sealed = len(vlog) // vlog.seg_slots
         changed = (vlog.dead_version != self._seen_dead_version
                    or n_sealed != self._seen_sealed
@@ -226,10 +239,27 @@ class MaintenanceScheduler(CostBenefitAnalyzer):
             if b <= c:
                 self._count(seg, "skipped")
                 continue
-            scored.append((b - c, seg))
+            scored.append((b - c, c, seg))
         scored.sort(reverse=True)
-        picked = [seg for _, seg in
-                  scored[: self.mcfg.gc_max_segments_per_tick]]
+        picked: list[int] = []
+        plan_cost = 0.0
+        deferred = 0
+        for _, c, seg in scored:
+            if len(picked) >= self.mcfg.gc_max_segments_per_tick:
+                deferred += 1
+                continue
+            if budget_us is not None and plan_cost + c > budget_us:
+                deferred += 1
+                continue
+            picked.append(seg)
+            plan_cost += c
+        if deferred:
+            # budget (or the per-tick cap) left profitable work behind:
+            # drop the change gate so the next scan re-scores it (the
+            # scan-interval gate still rate-limits the per-segment loop)
+            self._seen_dead_version = -1
+            self.gc_deferred += deferred
+        self.last_plan_cost_us = plan_cost
         for seg in picked:
             self._last_decision.pop(seg, None)
         self.gc_decisions["collected"] += len(picked)

@@ -101,6 +101,11 @@ class BourbonStore:
         self._lm_persisted: dict[int, int] = {}  # level -> epoch on disk
         # CBA-scheduled maintenance (auto value-log GC + checkpointing)
         self._in_maintenance = False
+        # True = a fleet coordinator owns the maintenance ticks: _tick()
+        # stops self-driving and run_maintenance() is called externally
+        # with a per-tick budget (repro.server.FleetMaintenanceCoordinator)
+        self.maintenance_deferred = False
+        self.last_maintenance_us = 0.0   # virtual cost of the last round
         self.auto_gc_stats = {"runs": 0, "segments_removed": 0,
                               "bytes_reclaimed": 0, "entries_moved": 0}
         if cfg.storage_dir is not None:
@@ -381,17 +386,32 @@ class BourbonStore:
         self._maintenance_tick()
 
     def _maintenance_tick(self) -> None:
-        """CBA-scheduled maintenance (§4.4 extended): run value-log GC on
-        segments whose estimated reclaim benefit exceeds the relocation
-        cost, and fold the MANIFEST once its edit log is worth rewriting.
-        Both charge the virtual clock like any other background work."""
+        if self.maintenance_deferred:
+            return   # a fleet coordinator owns the ticks (repro.server)
+        self.run_maintenance()
+
+    def run_maintenance(self, budget_us: float | None = None) -> float:
+        """One round of CBA-scheduled maintenance (§4.4 extended): run
+        value-log GC on segments whose estimated reclaim benefit exceeds
+        the relocation cost, and fold the MANIFEST once its edit log is
+        worth rewriting.  Both charge the virtual clock like any other
+        background work.
+
+        ``budget_us`` makes the round budget-bounded: GC candidates are
+        picked only while their (conservative) estimated cost fits, and
+        the checkpoint is skipped when its cost would overrun — so the
+        virtual time charged never exceeds the budget.  Returns the
+        virtual microseconds actually charged (also exposed as
+        ``last_maintenance_us``), 0.0 when nothing was worth doing."""
         if self._storage is None or self._in_maintenance or self._closed:
-            return
+            return 0.0
         m = self.cfg.maintenance
+        t0 = self.clock.now
         self._in_maintenance = True
         try:
             if m.auto_gc:
-                segs = self.cba.gc_candidates(self.vlog, self.clock.now)
+                segs = self.cba.gc_candidates(self.vlog, self.clock.now,
+                                              budget_us=budget_us)
                 if segs:
                     res = self.gc_value_log(min_dead_ratio=0.0,
                                             segments=segs)
@@ -402,13 +422,30 @@ class BourbonStore:
                         self.auto_gc_stats[k] += res[k]
             if (not self._storage.in_recovery and self.cba.should_checkpoint(
                     self._storage.manifest_tail_bytes())):
-                folded = self._storage.checkpoint()
-                cost = self.cfg.costs.checkpoint_per_byte * folded
-                self.cba.checkpoints += 1
-                self.cba.checkpoint_us += cost
-                self.clock.advance(cost)
+                # the fold rewrites the whole live state, so its cost is
+                # known up front — defer it when over budget.  But the
+                # fold is atomic and its cost only grows with the store:
+                # when it exceeds even an otherwise-unspent budget it
+                # would be deferred forever while the edit log grows, so
+                # run it anyway and count the overrun
+                est = (self.cfg.costs.checkpoint_per_byte
+                       * self._storage.manifest_bytes())
+                spent = self.clock.now - t0
+                never_fits = (budget_us is not None and spent == 0.0
+                              and est > budget_us)
+                if budget_us is None or spent + est <= budget_us \
+                        or never_fits:
+                    if never_fits:
+                        self.cba.checkpoint_overruns += 1
+                    folded = self._storage.checkpoint()
+                    cost = self.cfg.costs.checkpoint_per_byte * folded
+                    self.cba.checkpoints += 1
+                    self.cba.checkpoint_us += cost
+                    self.clock.advance(cost)
         finally:
             self._in_maintenance = False
+        self.last_maintenance_us = self.clock.now - t0
+        return self.last_maintenance_us
 
     def _persist_new_models(self) -> None:
         """Append just-learned PLR models into their sstable files."""
@@ -503,31 +540,43 @@ class BourbonStore:
 
     def range_query(self, start_keys: np.ndarray, length: int) -> np.ndarray:
         """Batched short scans: locate each start key (indexed path), then
-        merge-scan `length` items host-side.  Returns (B, length) keys."""
+        merge-scan `length` live items host-side.  Returns (B, length)
+        keys, -1 padded.  Versions shadow by seq: a key whose newest
+        flushed version is a tombstone is skipped, not emitted.  Scans the
+        flushed tree only — flush before ranging over fresh writes."""
         start_keys = np.asarray(start_keys, np.int64)
         out = np.full((start_keys.shape[0], length), -1, np.int64)
-        # host merge across levels (values shadowing by seq)
+        tables = list(self.tree.all_files())
         for bi, sk in enumerate(start_keys):
-            heads = []
-            for lvl in self.tree.levels:
-                for t in lvl:
-                    idx = int(np.searchsorted(t.keys, sk))
-                    if idx < t.n:
-                        heads.append((t.keys, idx))
-            # simple k-way: repeatedly take global min >= cursor
-            cursor = sk
-            for j in range(length):
+            heads = [[t, int(np.searchsorted(t.keys, sk))] for t in tables]
+            heads = [h for h in heads if h[1] < h[0].n]
+            cursor = int(sk)
+            j = 0
+            # k-way: repeatedly take the global min key >= cursor, then
+            # let its newest version decide liveness
+            while j < length and heads:
                 best = None
-                for keys, idx in heads:
-                    while idx < keys.shape[0] and keys[idx] < cursor:
+                for h in heads:
+                    t, idx = h
+                    while idx < t.n and t.keys[idx] < cursor:
                         idx += 1
-                    if idx < keys.shape[0]:
-                        v = keys[idx]
+                    h[1] = idx
+                    if idx < t.n:
+                        v = int(t.keys[idx])
                         if best is None or v < best:
                             best = v
+                heads = [h for h in heads if h[1] < h[0].n]
                 if best is None:
                     break
-                out[bi, j] = best
+                seq = -1
+                vptr = -1
+                for t, idx in heads:
+                    if (t.keys[idx] == best and int(t.seqs[idx]) > seq):
+                        seq = int(t.seqs[idx])
+                        vptr = int(t.vptrs[idx])
+                if vptr >= 0:               # tombstones shadow silently
+                    out[bi, j] = best
+                    j += 1
                 cursor = best + 1
         return out
 
@@ -754,5 +803,6 @@ class BourbonStore:
                 auto_gc=dict(self.auto_gc_stats),
                 manifest_bytes=self._storage.manifest_bytes(),
                 manifest_checkpoints=self.cba.checkpoints,
+                checkpoint_overruns=self.cba.checkpoint_overruns,
             )
         return out

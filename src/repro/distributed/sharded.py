@@ -298,7 +298,36 @@ class ShardedStore:
                 out[k] += res[k]
         return out
 
+    # ----------------------------------------------------------- maintenance
+    def set_maintenance_deferred(self, deferred: bool) -> None:
+        """Hand the per-shard maintenance ticks to an external owner (the
+        server's FleetMaintenanceCoordinator): deferred shards stop
+        self-driving GC/checkpointing from their own write ticks and only
+        do maintenance when :meth:`run_shard_maintenance` is called."""
+        for st in self.shards:
+            st.maintenance_deferred = deferred
+
+    def run_shard_maintenance(self, shard_id: int,
+                              budget_us: float | None = None) -> float:
+        """One budget-bounded maintenance round on one shard; returns the
+        virtual microseconds actually charged."""
+        return self.shards[shard_id].run_maintenance(budget_us)
+
+    def maintenance_us(self) -> float:
+        """Total virtual time the fleet has spent on maintenance (value-log
+        GC + MANIFEST checkpointing).  The server deltas this per tick to
+        measure fleet stalls."""
+        return sum(st.cba.gc_us + st.cba.checkpoint_us
+                   for st in self.shards)
+
     # -------------------------------------------------------------- snapshot
+    def shard_epochs(self) -> tuple:
+        """Per-shard structural epoch (flush/compaction event count) — the
+        same counter that versions the device state, exposed so the
+        server's HotKeyCache can stamp entries with the epoch they were
+        read under and lazily drop them when it moves."""
+        return self._shard_epochs()
+
     def _shard_epochs(self) -> tuple:
         # one flush/compaction event = one structural change: the exact
         # moments a shard's memtable rolls into a new immutable snapshot
@@ -389,13 +418,46 @@ class ShardedStore:
             return found, vals
         return found, vptr
 
+    def range_query(self, start_keys: np.ndarray, length: int) -> np.ndarray:
+        """Batched short scans across the partition map: each start key is
+        answered by its owning shard, and a scan that runs off the end of
+        a shard's key range continues into the next shard from its split
+        boundary — so results are identical to a single unpartitioned
+        store's.  Returns (B, length) keys, -1 padded.  (Delegates to the
+        per-shard :meth:`BourbonStore.range_query`, which scans the
+        flushed tree — flush before ranging over fresh writes.)"""
+        start_keys = np.asarray(start_keys, np.int64)
+        out = np.full((start_keys.shape[0], length), -1, np.int64)
+        owner = self.shard_of(start_keys)
+        for bi in range(start_keys.shape[0]):
+            s = int(owner[bi])
+            cur = int(start_keys[bi])
+            got = 0
+            while got < length:
+                res = self.shards[s].range_query(
+                    np.array([cur], np.int64), length - got)[0]
+                valid = res[res >= 0]
+                out[bi, got: got + valid.shape[0]] = valid
+                got += int(valid.shape[0])
+                if s == self.n_shards - 1:
+                    break
+                cur = int(self._splits[s])   # next shard's first owned key
+                s += 1
+        return out
+
     # ----------------------------------------------------------------- stats
     def stats(self) -> dict:
         per = [st.stats() for st in self.shards]
+        auto_gc = {"runs": 0, "segments_removed": 0, "bytes_reclaimed": 0,
+                   "entries_moved": 0}
+        for p in per:
+            for k in auto_gc:
+                auto_gc[k] += p.get("auto_gc", {}).get(k, 0)
         agg = {
             "n_shards": self.n_shards,
             "state_epoch": self.state_epoch,
             "uses_shard_map": self.uses_shard_map,
+            "n_gets": self.n_gets,
             "n_records": sum(p["n_records"] for p in per),
             "n_files": sum(p["n_files"] for p in per),
             "files_learned": sum(p["files_learned"] for p in per),
@@ -403,6 +465,18 @@ class ShardedStore:
                                     for p in per),
             "level_models_recovered": sum(
                 p.get("level_models_recovered", 0) for p in per),
+            # fleet maintenance totals (previously dropped on the floor):
+            # value-log GC reclamation and MANIFEST checkpoint counts
+            # summed across shards, plus the virtual time they charged
+            "vlog_segments_removed": sum(
+                p.get("vlog_segments_removed", 0) for p in per),
+            "vlog_disk_bytes": sum(p.get("vlog_disk_bytes", 0) for p in per),
+            "auto_gc": auto_gc,
+            "gc_us": sum(p.get("gc_us", 0.0) for p in per),
+            "manifest_checkpoints": sum(
+                p.get("manifest_checkpoints", 0) for p in per),
+            "checkpoint_us": sum(st.cba.checkpoint_us for st in self.shards),
+            "maintenance_us": self.maintenance_us(),
             "shards": per,
         }
         return agg

@@ -1,0 +1,15 @@
+"""Batched request-serving front end over the sharded Bourbon store: a
+bounded :class:`RequestQueue` + coalescing :class:`Batcher`, a
+snapshot-consistent multi-get, the epoch-invalidated
+:class:`HotKeyCache`, and the :class:`FleetMaintenanceCoordinator` that
+staggers and budgets per-shard GC/checkpointing.  See README.md in this
+package for the architecture."""
+
+from .admission import Batch, Batcher, RequestQueue, ServerRequest
+from .cache import HotKeyCache
+from .coordinator import CoordinatorConfig, FleetMaintenanceCoordinator
+from .frontend import BourbonServer, ServerConfig
+
+__all__ = ["Batch", "Batcher", "BourbonServer", "CoordinatorConfig",
+           "FleetMaintenanceCoordinator", "HotKeyCache", "RequestQueue",
+           "ServerConfig", "ServerRequest"]

@@ -1,0 +1,110 @@
+"""HotKeyCache — learned-path-aware read-through cache.
+
+Caches (key -> value row) for keys the snapshot/memtable path already
+answered, so a hot key skips the whole lookup stack on its next GET.
+Correctness comes from two invalidation rules, both visible in
+``stats()``:
+
+* **epoch** — every entry is stamped with its owning shard's structural
+  epoch (``ShardedStore.shard_epochs()``: the flush/compaction event
+  count that also versions the device state).  A probe whose entry
+  carries a stale epoch drops it and misses: any memtable roll or
+  compaction on the shard — including one triggered by value-log GC —
+  conservatively flushes that shard's cached keys.
+* **write** — PUT/DELETE batches flowing through the server explicitly
+  drop their keys (an overwrite that stays in the memtable bumps no
+  epoch, so the epoch rule alone would serve stale data).
+
+Only *positive* results are cached — a not-found is never remembered, so
+a fresh insert can't be shadowed by a stale negative.  Writes that
+bypass the server (direct store calls) are outside the contract: route
+all writes through the front end.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+__all__ = ["HotKeyCache"]
+
+
+class HotKeyCache:
+    def __init__(self, slots: int = 4096) -> None:
+        self.slots = int(slots)
+        # key -> (shard, epoch-at-fill, value row); insertion order is the
+        # LRU order (lookup hits move_to_end)
+        self._d: OrderedDict[int, tuple[int, int, np.ndarray]] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.fills = 0
+        self.evictions = 0
+        self.inval_epoch = 0
+        self.inval_write = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def lookup(self, keys: np.ndarray, epochs: tuple,
+               out: np.ndarray) -> np.ndarray:
+        """Probe the cache; hit rows are written into ``out`` in place.
+        Returns the (B,) hit mask.  ``epochs`` is the fleet's current
+        epoch vector — entries stamped under an older epoch are dropped
+        here (lazy invalidation) and report as misses."""
+        hit = np.zeros(keys.shape[0], bool)
+        for i in range(keys.shape[0]):
+            k = int(keys[i])
+            ent = self._d.get(k)
+            if ent is None:
+                self.misses += 1
+                continue
+            shard, epoch, val = ent
+            if epochs[shard] != epoch:
+                del self._d[k]
+                self.inval_epoch += 1
+                self.misses += 1
+                continue
+            self._d.move_to_end(k)
+            out[i] = val
+            hit[i] = True
+            self.hits += 1
+        return hit
+
+    def fill(self, keys: np.ndarray, values: np.ndarray,
+             owners: np.ndarray, epochs: tuple) -> None:
+        """Admit found (key, value) pairs read under ``epochs``."""
+        for i in range(keys.shape[0]):
+            k = int(keys[i])
+            shard = int(owners[i])
+            if k in self._d:
+                self._d.move_to_end(k)
+            self._d[k] = (shard, epochs[shard], values[i].copy())
+            self.fills += 1
+            if len(self._d) > self.slots:
+                self._d.popitem(last=False)
+                self.evictions += 1
+
+    def invalidate(self, keys: np.ndarray) -> int:
+        """Drop keys a write batch superseded; returns how many were
+        actually cached."""
+        n = 0
+        for k in np.unique(np.asarray(keys, np.int64)):
+            if self._d.pop(int(k), None) is not None:
+                n += 1
+        self.inval_write += n
+        return n
+
+    def stats(self) -> dict:
+        probes = self.hits + self.misses
+        return {
+            "slots": self.slots,
+            "entries": len(self._d),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / max(probes, 1),
+            "fills": self.fills,
+            "evictions": self.evictions,
+            "inval_epoch": self.inval_epoch,
+            "inval_write": self.inval_write,
+        }

@@ -1,0 +1,198 @@
+"""BourbonServer — the batched request-serving front end.
+
+The tick loop (modeled on the admission loop of
+``repro.serving.engine``, applied to the key-value plane):
+
+    clients --submit--> RequestQueue --Batcher--> coalesced batch
+        GET:  HotKeyCache probe -> ShardedStore.get_batch (one
+              snapshot-consistent multi-get per batch) -> cache fill
+              -> scatter results back to each request
+        PUT/DELETE: ShardedStore write batch -> cache invalidation
+    then one FleetMaintenanceCoordinator round (budgeted, staggered)
+
+Snapshot consistency: a read batch is answered by exactly one
+epoch-versioned device state — ``ShardedStore.get_batch`` resolves the
+whole coalesced key set against one ``device_state()`` (plus the
+per-shard memtable overlays), so two requests coalesced into the same
+batch can never observe different snapshots of the same shard.  Cache
+hits are values read under the *current* epoch vector (stale epochs
+miss), so they are consistent with what the store would answer now.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .admission import Batch, Batcher, RequestQueue, ServerRequest
+from .cache import HotKeyCache
+from .coordinator import CoordinatorConfig, FleetMaintenanceCoordinator
+
+__all__ = ["ServerConfig", "BourbonServer"]
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    max_batch_keys: int = 1024      # coalesced keys per store batch
+    max_wait_ticks: int = 2         # ticks a partial batch may wait
+    queue_capacity: int = 256       # requests; full queue = backpressure
+    max_batches_per_tick: int = 4   # queue drains per tick (reads+writes)
+    # virtual μs an *idle* tick represents: with no requests to serve,
+    # shard clocks still move, so ski-rental T_waits (learning and GC
+    # candidacy) expire instead of freezing with the workload
+    idle_tick_us: float = 64.0
+    cache_slots: int = 4096         # 0 disables the HotKeyCache
+    coordinate_maintenance: bool = True
+    coordinator: CoordinatorConfig = dataclasses.field(
+        default_factory=CoordinatorConfig)
+
+
+class BourbonServer:
+    def __init__(self, store, cfg: ServerConfig | None = None) -> None:
+        self.store = store
+        self.cfg = cfg if cfg is not None else ServerConfig()
+        self.queue = RequestQueue(self.cfg.queue_capacity)
+        self.batcher = Batcher(self.cfg.max_batch_keys,
+                               self.cfg.max_wait_ticks)
+        self.cache = (HotKeyCache(self.cfg.cache_slots)
+                      if self.cfg.cache_slots else None)
+        self.coordinator = (
+            FleetMaintenanceCoordinator(store, self.cfg.coordinator)
+            if self.cfg.coordinate_maintenance else None)
+        self.ticks = 0
+        self.completed = 0
+        self.served_from_cache = 0   # keys answered without a store probe
+        self.store_probe_keys = 0    # keys that did reach the store
+        # fleet-stall metric, valid with OR without the coordinator: the
+        # largest maintenance charge observed within one server tick
+        self.max_maintenance_tick_us = 0.0
+        self._maint_us_seen = store.maintenance_us()
+        self._value_size = store.shards[0].cfg.value_size
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: ServerRequest) -> bool:
+        """Enqueue a request; False means the queue is full (backpressure —
+        retry after a tick)."""
+        return self.queue.submit(req, self.ticks)
+
+    # ----------------------------------------------------------------- tick
+    def tick(self) -> list[ServerRequest]:
+        """One server iteration: drain up to ``max_batches_per_tick``
+        coalesced batches, then run one maintenance-coordination round.
+        Returns the requests completed this tick."""
+        done: list[ServerRequest] = []
+        for _ in range(self.cfg.max_batches_per_tick):
+            batch = self.batcher.next_batch(self.queue, self.ticks)
+            if batch is None:
+                break
+            if batch.op == "get":
+                self._serve_reads(batch)
+            else:
+                self._apply_writes(batch)
+            done.extend(batch.requests)
+        if not done:
+            # an idle tick is still the passage of (virtual) time: advance
+            # the shard clocks so T_waits (learning and GC candidacy)
+            # expire instead of freezing with the workload
+            for sh in self.store.shards:
+                sh.clock.advance(self.cfg.idle_tick_us)
+        # every tick gives the stores their own tick: the learning
+        # executor progresses (and, when no coordinator owns maintenance,
+        # the shards self-drive GC/checkpointing) under any load shape —
+        # _maintenance_tick no-ops on deferred shards, so this never
+        # bypasses the coordinator's budget
+        for sh in self.store.shards:
+            sh._tick()
+        if self.coordinator is not None:
+            self.coordinator.tick()
+        m = self.store.maintenance_us()
+        self.max_maintenance_tick_us = max(self.max_maintenance_tick_us,
+                                           m - self._maint_us_seen)
+        self._maint_us_seen = m
+        for r in done:
+            r.completed_tick = self.ticks
+            r.done = True
+        self.completed += len(done)
+        self.ticks += 1
+        return done
+
+    def run_until_drained(self, max_ticks: int = 100000
+                          ) -> list[ServerRequest]:
+        out: list[ServerRequest] = []
+        for _ in range(max_ticks):
+            if not len(self.queue):
+                break
+            out.extend(self.tick())
+        return out
+
+    # ----------------------------------------------------------------- reads
+    def _serve_reads(self, batch: Batch) -> None:
+        uniq = batch.keys
+        vals = np.zeros((uniq.shape[0], self._value_size), np.uint8)
+        found = np.zeros(uniq.shape[0], bool)
+        if self.cache is not None:
+            # the epoch vector is stable across the whole read path (only
+            # writes flush/compact), so one capture stamps both the cache
+            # probe and the fill below
+            epochs = self.store.shard_epochs()
+            hit = self.cache.lookup(uniq, epochs, vals)
+            found |= hit
+            self.served_from_cache += int(hit.sum())
+        else:
+            hit = np.zeros(uniq.shape[0], bool)
+        miss = ~hit
+        if miss.any():
+            f, v = self.store.get_batch(uniq[miss], with_values=True)
+            found[miss] = f
+            vals[miss] = v
+            self.store_probe_keys += int(miss.sum())
+            # charge read service time to the owning shards' virtual
+            # clocks (ShardedStore.get_batch itself charges nothing), so
+            # sustained read-only load still moves time forward and
+            # maintenance/learning deadlines keep becoming due
+            owners_probed = self.store.shard_of(uniq[miss])
+            for i, sh in enumerate(self.store.shards):
+                n_i = int((owners_probed == i).sum())
+                if n_i:
+                    sh.clock.advance(n_i * sh.cfg.costs.t_pm)
+            if self.cache is not None:
+                pos = np.nonzero(miss)[0][f]
+                if pos.shape[0]:
+                    self.cache.fill(uniq[pos], vals[pos],
+                                    self.store.shard_of(uniq[pos]), epochs)
+        for req, idx in zip(batch.requests, batch.scatter):
+            req.found = found[idx]
+            req.result = vals[idx]
+
+    # ---------------------------------------------------------------- writes
+    def _apply_writes(self, batch: Batch) -> None:
+        if batch.op == "put":
+            self.store.put_batch(batch.keys, batch.values)
+        else:
+            self.store.delete_batch(batch.keys)
+        if self.cache is not None:
+            self.cache.invalidate(batch.keys)
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        b = self.batcher
+        return {
+            "ticks": self.ticks,
+            "submitted": self.queue.submitted,
+            "rejected": self.queue.rejected,
+            "completed": self.completed,
+            "queued": len(self.queue),
+            "batches": b.batches,
+            "coalesced_requests": b.coalesced_requests,
+            "request_keys": b.request_keys,
+            "batch_keys": b.batch_keys,
+            "held": b.held,
+            "served_from_cache": self.served_from_cache,
+            "store_probe_keys": self.store_probe_keys,
+            "max_maintenance_tick_us": self.max_maintenance_tick_us,
+            "cache": self.cache.stats() if self.cache is not None else None,
+            "coordinator": (self.coordinator.stats()
+                            if self.coordinator is not None else None),
+            "store": self.store.stats(),
+        }
