@@ -32,8 +32,9 @@ SUITES = {
                       "dirs vs rebuild from scratch"),
     "serve": ("bench_serve",
               "batched request-serving front end vs naive per-request "
-              "loop; fleet-stall time with vs without the maintenance "
-              "coordinator"),
+              "loop; pipelined (multi-batch in-flight) vs synchronous "
+              "tick loop at 16/64/256 clients; fleet-stall time with vs "
+              "without the maintenance coordinator"),
 }
 
 

@@ -26,12 +26,14 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run dist_recovery
 
-# serving front end: the server tests (admission, HotKeyCache
-# invalidation, fleet maintenance coordination) run in the tier-1 suite
-# above; re-run them standalone so a serving regression is named, then
-# the smoke serve benchmark (batched vs naive throughput, fleet-stall
-# with vs without the coordinator)
+# serving front end: the server + pipeline tests (admission, HotKeyCache
+# invalidation, fleet maintenance coordination, dispatch/resolve split,
+# in-flight epoch consistency, write barriers, backpressure) run in the
+# tier-1 suite above; re-run them standalone so a serving regression is
+# named, then the smoke serve benchmark (batched vs naive throughput,
+# the pipelined arm vs the synchronous tick loop, fleet-stall with vs
+# without the coordinator)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m pytest -x -q tests/test_server.py
+    python -m pytest -x -q tests/test_server.py tests/test_pipeline.py
 REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run serve

@@ -32,7 +32,7 @@ from .lsm import LSMTree, N_LEVELS
 from .sstable import BLOCK_RECORDS
 
 __all__ = ["EngineConfig", "DeviceLevel", "DeviceState", "LookupEngine",
-           "binsearch_rows"]
+           "LookupResult", "PendingLookup", "binsearch_rows"]
 
 KEY_SENTINEL = np.iinfo(np.int64).max
 
@@ -103,14 +103,62 @@ class DeviceState:
         return cls(*children)
 
 
-@dataclasses.dataclass
 class LookupResult:
-    found: np.ndarray        # (B,) bool
-    vptr: np.ndarray         # (B,) int64
-    served_level: np.ndarray  # (B,) int8, -1 = not found anywhere
-    pos_counts: list         # per level (F,) int32 positive internal lookups
-    neg_counts: list         # per level (F,) int32 negative internal lookups
-    values: np.ndarray | None = None
+    """Materialized lookup answers.
+
+    ``found`` / ``vptr`` / ``served_level`` are host arrays (the caller
+    asked for them by resolving).  The per-level CBA counter vectors stay
+    on device until first touched: callers that only want values (the
+    serving hot path) never pay the extra device->host transfer, while
+    the stats path (`BourbonStore._account_lookup`) materializes them
+    once, lazily, on access."""
+
+    def __init__(self, found, vptr, served_level, pos_counts, neg_counts,
+                 values=None):
+        self.found = found                 # (B,) bool
+        self.vptr = vptr                   # (B,) int64
+        self.served_level = served_level   # (B,) int8, -1 = miss everywhere
+        self._pos_dev = pos_counts         # per level (F,) device int32
+        self._neg_dev = neg_counts
+        self._pos_np: list | None = None
+        self._neg_np: list | None = None
+        self.values = values
+
+    @property
+    def pos_counts(self) -> list:
+        if self._pos_np is None:
+            self._pos_np = [np.asarray(p) for p in self._pos_dev]
+        return self._pos_np
+
+    @property
+    def neg_counts(self) -> list:
+        if self._neg_np is None:
+            self._neg_np = [np.asarray(n) for n in self._neg_dev]
+        return self._neg_np
+
+
+@dataclasses.dataclass
+class PendingLookup:
+    """The dispatch half of a lookup: every field is a device array still
+    being computed (JAX async dispatch).  Nothing here blocks the host —
+    `resolve()` is the synchronization point, so a caller can dispatch
+    batch N+1 (admission, cache probing, memtable overlay) while the
+    device works on batch N."""
+    found: jnp.ndarray       # (B,) bool, device
+    vptr: jnp.ndarray        # (B,) int64, device
+    served: jnp.ndarray      # (B,) int8, device
+    pos_counts: tuple        # per level (F,) int32, device
+    neg_counts: tuple
+    values: jnp.ndarray | None = None
+
+    def resolve(self) -> LookupResult:
+        """Block on the device results and hand back host arrays (counter
+        vectors stay lazy — see LookupResult)."""
+        return LookupResult(np.asarray(self.found), np.asarray(self.vptr),
+                            np.asarray(self.served),
+                            self.pos_counts, self.neg_counts,
+                            None if self.values is None
+                            else np.asarray(self.values))
 
 
 # ----------------------------------------------------------------------------
@@ -202,6 +250,11 @@ class LookupEngine:
         self._lm_versions: list = [-1] * N_LEVELS
         self._lm_cache: dict[int, LevelModel] = {}
         self._jit_cache: dict = {}
+        # traces of _lookup_impl actually taken (incremented at trace
+        # time): a fresh DeviceState with unchanged geometry must reuse
+        # the cached program — regression-tested, since a silent retrace
+        # per epoch would swamp the lookups it serves
+        self.trace_count = 0
         # stamp for level models that arrive without an epoch: unique,
         # decreasing, never reused — store-fit models carry epochs >= 0
         self._unstamped_epoch = -2
@@ -419,6 +472,7 @@ class LookupEngine:
         # l0_slots / live_levels — static occupancy per jit specialization;
         # empty levels are skipped entirely (no dead gathers)
         """mode: 'baseline' | 'model' | 'mixed' | 'level'."""
+        self.trace_count += 1   # python side effect: runs only at trace
         B = probes.shape[0]
         found = jnp.zeros(B, bool)
         vptr = jnp.full(B, -1, jnp.int64)
@@ -491,30 +545,48 @@ class LookupEngine:
             neg_counts.append(neg_c)
         return found, vptr, served, tuple(pos_counts), tuple(neg_counts)
 
-    def lookup(self, state: DeviceState, probes: np.ndarray, mode: str,
-               vlog=None, l0_live: int | None = None) -> LookupResult:
-        B = probes.shape[0]
+    @staticmethod
+    def state_signature(state: DeviceState) -> tuple:
+        """Full shape/dtype signature of a device state.  Two states with
+        equal signatures are guaranteed to reuse one traced program —
+        keying the jit cache on the keys-array shapes alone would let a
+        state whose bloom/fence/segment padding moved silently retrace
+        inside a cached wrapper."""
+        return tuple((tuple(leaf.shape), str(leaf.dtype))
+                     for leaf in jax.tree_util.tree_leaves(state))
+
+    def _jitted_lookup(self, state: DeviceState, B: int, mode: str,
+                       l0_live: int | None):
         l0_cap = int(state.levels[0].max_key.shape[0])
         # bucket the L0 slot count (0 or cap): occupancy changes must not
         # retrigger compilation in mixed read/write workloads
         l0_n = 0 if (l0_live == 0) else l0_cap
         live = tuple(bool(int(lv.n_files) > 0) for lv in state.levels)
-        key = (mode, B, l0_n, live,
-               tuple(lv.keys.shape for lv in state.levels))
+        key = (mode, B, l0_n, live, self.state_signature(state))
         if key not in self._jit_cache:
             fn = partial(self._lookup_impl, mode=mode, l0_slots=(l0_n,),
                          live_levels=live)
             self._jit_cache[key] = jax.jit(
                 lambda st, p: fn(st, p))
-        found, vptr, served, pos_c, neg_c = self._jit_cache[key](
+        return self._jit_cache[key]
+
+    def lookup_async(self, state: DeviceState, probes: np.ndarray, mode: str,
+                     vlog=None, l0_live: int | None = None) -> PendingLookup:
+        """Dispatch half of the lookup: launches the device program and
+        returns immediately with device-array futures (JAX async
+        dispatch).  The host is free to admit/coalesce the next batch
+        while this one computes; `PendingLookup.resolve()` blocks."""
+        B = probes.shape[0]
+        fn = self._jitted_lookup(state, B, mode, l0_live)
+        found, vptr, served, pos_c, neg_c = fn(
             state, jnp.asarray(probes, jnp.int64))
         values = None
         if self.cfg.fetch_values and vlog is not None:
             dv = vlog.device_view()
             safe = jnp.clip(vptr, 0, dv.shape[0] - 1)
-            values = np.asarray(dv[safe])
-        return LookupResult(np.asarray(found), np.asarray(vptr),
-                            np.asarray(served),
-                            [np.asarray(p) for p in pos_c],
-                            [np.asarray(n) for n in neg_c],
-                            values)
+            values = dv[safe]
+        return PendingLookup(found, vptr, served, pos_c, neg_c, values)
+
+    def lookup(self, state: DeviceState, probes: np.ndarray, mode: str,
+               vlog=None, l0_live: int | None = None) -> LookupResult:
+        return self.lookup_async(state, probes, mode, vlog, l0_live).resolve()

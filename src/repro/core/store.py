@@ -26,12 +26,12 @@ import numpy as np
 from .cba import (CBAConfig, LearningExecutor, MaintenanceConfig,
                   MaintenanceScheduler)
 from .clock import CostModel, VirtualClock
-from .engine import EngineConfig, LookupEngine, LookupResult
+from .engine import EngineConfig, LookupEngine, LookupResult, PendingLookup
 from .lsm import LSMConfig, LSMTree, N_LEVELS
 from .memtable import MemTable
 from .valuelog import ValueLog
 
-__all__ = ["StoreConfig", "BourbonStore"]
+__all__ = ["StoreConfig", "BourbonStore", "PendingBatch"]
 
 _PAD_PROBE = -(1 << 62)
 
@@ -63,6 +63,23 @@ class StoreConfig:
         self.engine.bloom_k = self.lsm.bloom_k
         self.engine.fetch_values = self.fetch_values
         self.cba.policy = self.policy
+
+
+@dataclasses.dataclass
+class PendingBatch:
+    """Dispatch half of a batched GET: the memtable overlay is already
+    answered host-side, the engine part is in flight on the device
+    (`PendingLookup`), and the whole handle is pinned to the device-state
+    snapshot that was current at dispatch.  `BourbonStore.resolve_get`
+    is the synchronization point — accounting, learning ticks, and value
+    fetches all happen there, so dispatching N+1 never blocks on N."""
+    probes: np.ndarray                 # (B,) int64, as submitted
+    found: np.ndarray                  # (B,) bool, memtable hits prefilled
+    vptr: np.ndarray                   # (B,) int64, memtable hits prefilled
+    miss: np.ndarray                   # (B,) bool, keys the engine answers
+    n_miss: int
+    pending: PendingLookup | None      # None when the memtable answered all
+    resolved: bool = False
 
 
 class BourbonStore:
@@ -481,35 +498,54 @@ class BourbonStore:
             return "model_pure"   # skip the dead baseline arm
         return "model"
 
-    def get_batch(self, probes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """Returns (found bool (B,), values (B, value_size) or vptrs)."""
+    def dispatch_get(self, probes: np.ndarray) -> PendingBatch:
+        """Non-blocking half of :meth:`get_batch`: answer the memtable
+        overlay host-side and launch the device lookup for the misses,
+        returning a :class:`PendingBatch` without waiting for the device.
+        The handle is pinned to the device state current at dispatch —
+        writes applied afterwards are invisible to it, which is exactly
+        the snapshot-per-batch contract the serving plane wants."""
         probes = np.asarray(probes, np.int64)
-        B = probes.shape[0]
         mt_found, mt_vptr = self.memtable.get_batch(probes)
         miss = ~mt_found
         n_miss = int(miss.sum())
-        found = mt_found.copy()
-        vptr = mt_vptr.copy()
+        pending = None
         if n_miss:
             pad = _next_pow2(max(n_miss, 64))
             eng_probes = np.full(pad, _PAD_PROBE, np.int64)
             eng_probes[:n_miss] = probes[miss]
             state = self.engine.build_state(self.tree, self.level_models)
-            res = self.engine.lookup(state, eng_probes, self._engine_mode(),
-                                     self.vlog,
-                                     l0_live=len(self.tree.levels[0]))
-            found[miss] = res.found[:n_miss]
-            vptr[miss] = res.vptr[:n_miss]
+            pending = self.engine.lookup_async(
+                state, eng_probes, self._engine_mode(), self.vlog,
+                l0_live=len(self.tree.levels[0]))
+        return PendingBatch(probes, mt_found.copy(), mt_vptr.copy(),
+                            miss, n_miss, pending)
+
+    def resolve_get(self, pb: PendingBatch) -> tuple[np.ndarray, np.ndarray]:
+        """Blocking half: materialize the device results, merge them under
+        the memtable overlay, account the lookup, and tick the store."""
+        if pb.resolved:
+            raise RuntimeError("PendingBatch already resolved")
+        pb.resolved = True
+        found, vptr = pb.found, pb.vptr
+        if pb.pending is not None:
+            res = pb.pending.resolve()
+            found[pb.miss] = res.found[:pb.n_miss]
+            vptr[pb.miss] = res.vptr[:pb.n_miss]
             self._account_lookup(res)
         # a located tombstone (vptr -1) shadows older versions but the GET
         # reports not-found
         found &= vptr >= 0
-        self.n_gets += B
+        self.n_gets += pb.probes.shape[0]
         self.clock.advance(0.0)  # time added in _account_lookup
         self._tick()
         if self.cfg.fetch_values:
             return found, self.vlog.get_batch_np(vptr)
         return found, vptr
+
+    def get_batch(self, probes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (found bool (B,), values (B, value_size) or vptrs)."""
+        return self.resolve_get(self.dispatch_get(probes))
 
     def _account_lookup(self, res: LookupResult) -> None:
         """Attribute per-file internal lookups; advance virtual time by

@@ -4,8 +4,8 @@ BourbonStore` shards, each owning its own ``shard-<i>/`` directory (WAL,
 MANIFEST, sstables, value log), serving batched GETs through the
 ``shard_map`` read path against an epoch-versioned device snapshot."""
 
-from .sharded import (ShardedConfig, ShardedStore, load_shard_snapshot,
-                      merge_live)
+from .sharded import (ShardedConfig, ShardedStore, ShardPendingBatch,
+                      load_shard_snapshot, merge_live)
 
-__all__ = ["ShardedConfig", "ShardedStore", "load_shard_snapshot",
-           "merge_live"]
+__all__ = ["ShardedConfig", "ShardedStore", "ShardPendingBatch",
+           "load_shard_snapshot", "merge_live"]

@@ -38,6 +38,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -57,11 +58,31 @@ from repro.storage.format import fsync_dir, sst_path
 from repro.storage.manifest import read_manifest
 from repro.storage.sstable_io import load_sstable
 
-__all__ = ["ShardedConfig", "ShardedStore", "load_shard_snapshot",
-           "merge_live"]
+__all__ = ["ShardedConfig", "ShardedStore", "ShardPendingBatch",
+           "load_shard_snapshot", "merge_live"]
 
 TOPOLOGY = "SHARDS.json"
 _PAD_PROBE = -(1 << 62)
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def _local_get_all_shards(state: dict, probes: jnp.ndarray,
+                          n_shards: int, delta: int):
+    """Host-fallback GET as ONE compiled program: every shard's
+    `dist_get_local` kernel plus the owner-exclusive where-merge, fused.
+    Running this eagerly (the old path) paid per-op dispatch overhead for
+    hundreds of tiny ops and blocked the host for the whole walk; jitted,
+    the call is a single async enqueue — which is what lets the sharded
+    store's dispatch half return before the device finishes."""
+    n = probes.shape[0]
+    found = jnp.zeros(n, bool)
+    vptr = jnp.full(n, -1, jnp.int64)
+    for s in range(n_shards):
+        shard = {k: v[s: s + 1] for k, v in state.items()}
+        h, vv = dist_get_local(shard, probes, delta)
+        vptr = jnp.where(h, vv, vptr)
+        found = found | h
+    return found, vptr
 
 
 @dataclasses.dataclass
@@ -135,6 +156,29 @@ def load_shard_snapshot(shard_dir: str,
     tables = [load_sstable(sst_path(shard_dir, fid), verify=verify)
               for fid in sorted(state.live)]
     return merge_live(tables)
+
+
+@dataclasses.dataclass
+class ShardPendingBatch:
+    """Dispatch half of a distributed GET, pinned to ONE epoch-versioned
+    device state.  The memtable overlay is already answered host-side;
+    ``f_dev``/``v_dev`` are device futures for the snapshot path (JAX
+    async dispatch — nothing blocked yet).  ``epochs`` records the exact
+    per-shard epoch vector the batch is answered under: every key in the
+    batch resolves against that one snapshot, which is the
+    snapshot-consistency invariant the pipelined server asserts."""
+    probes: np.ndarray             # (B,) int64
+    owner: np.ndarray              # (B,) int32 owning shard per key
+    found: np.ndarray              # (B,) bool, memtable hits prefilled
+    vptr: np.ndarray               # (B,) int64, memtable hits prefilled
+    miss: np.ndarray               # (B,) bool — answered by the snapshot
+    n_miss: int
+    f_dev: object                  # device (pad,) bool future, or None
+    v_dev: object                  # device (pad,) int64 future, or None
+    epochs: tuple                  # pinned per-shard epoch vector
+    state_epoch: int               # device-state generation at dispatch
+    with_values: bool
+    resolved: bool = False
 
 
 class ShardedStore:
@@ -357,7 +401,13 @@ class ShardedStore:
         return self._state
 
     # ------------------------------------------------------------------ read
-    def _dist_lookup(self, probes: np.ndarray):
+    def _dist_dispatch(self, probes: np.ndarray):
+        """Launch the snapshot-path lookup on device and return the raw
+        (found, vptr) futures WITHOUT materializing them — both the mesh
+        shard_map call and the host-fallback per-shard kernel loop only
+        enqueue work (the fallback's combine is jnp.where on device), so
+        the caller overlaps admission of the next batch with this one's
+        compute.  Mesh outputs are padded; slice ``[:n]`` at resolve."""
         state = self.device_state()
         n = probes.shape[0]
         if self._mesh is not None:
@@ -371,23 +421,25 @@ class ShardedStore:
             buf[:n] = probes
             with set_mesh(self._mesh):
                 f, v = self._get_fn(state, jnp.asarray(buf))
-            return np.asarray(f)[:n], np.asarray(v)[:n]
-        # host fallback: the same shard kernel, one shard row at a time
-        found = np.zeros(n, bool)
-        vptr = np.full(n, -1, np.int64)
-        jp = jnp.asarray(probes)
-        for s in range(self.n_shards):
-            shard = {k: v[s: s + 1] for k, v in state.items()}
-            h, vv = dist_get_local(shard, jp, self.delta)
-            h = np.asarray(h)
-            vptr[h] = np.asarray(vv)[h]
-            found |= h
-        return found, vptr
+            return f, v
+        # host fallback: the same shard kernel, all shard rows fused into
+        # one compiled program (each probe has exactly one owner, so the
+        # where-merge is exact); padding the probe count to a power of two
+        # keeps the trace cache small across varied batch sizes
+        pad = next_pow2(max(n, 64))
+        buf = np.full(pad, _PAD_PROBE, np.int64)
+        buf[:n] = probes
+        return _local_get_all_shards(state, jnp.asarray(buf),
+                                     self.n_shards, self.delta)
 
-    def get_batch(self, probes: np.ndarray, with_values: bool = False):
-        """Batched GET: per-shard memtable overlay (newest data wins,
-        tombstones shadow), then the snapshot path for the rest.  Returns
-        (found, shard-local vptrs) or (found, values)."""
+    def dispatch_get(self, probes: np.ndarray,
+                     with_values: bool = False) -> ShardPendingBatch:
+        """Non-blocking half of :meth:`get_batch`: memtable overlays are
+        answered host-side, the snapshot path is launched on device, and
+        the returned handle is pinned to the single epoch-versioned
+        device state current at dispatch.  Resolve with
+        :meth:`resolve_get`; multiple dispatched batches may be in flight
+        at once and (absent interleaved writes) share one state epoch."""
         probes = np.asarray(probes, np.int64)
         B = probes.shape[0]
         owner = self.shard_of(probes)
@@ -400,23 +452,48 @@ class ShardedStore:
             f, v = st.memtable.get_batch(probes[idx])
             mt_hit[idx[f]] = True
             vptr[idx[f]] = v[f]
-        found = mt_hit.copy()
         miss = ~mt_hit
-        if miss.any():
-            f2, v2 = self._dist_lookup(probes[miss])
-            found[miss] = f2
-            vptr[miss] = np.where(f2, v2, -1)
+        n_miss = int(miss.sum())
+        f_dev = v_dev = None
+        if n_miss:
+            f_dev, v_dev = self._dist_dispatch(probes[miss])
+            epochs = self._state_epochs     # vector the state was built on
+        else:
+            epochs = self._shard_epochs()
+        return ShardPendingBatch(probes, owner, mt_hit.copy(), vptr, miss,
+                                 n_miss, f_dev, v_dev, tuple(epochs),
+                                 self.state_epoch, with_values)
+
+    def resolve_get(self, pb: ShardPendingBatch):
+        """Blocking half: materialize the device futures and merge them
+        under the memtable overlay captured at dispatch."""
+        if pb.resolved:
+            raise RuntimeError("ShardPendingBatch already resolved")
+        pb.resolved = True
+        found, vptr = pb.found, pb.vptr
+        if pb.f_dev is not None:
+            f2 = np.asarray(pb.f_dev)[:pb.n_miss]
+            v2 = np.asarray(pb.v_dev)[:pb.n_miss]
+            found[pb.miss] = f2
+            vptr[pb.miss] = np.where(f2, v2, -1)
         found &= vptr >= 0     # located tombstones report not-found
+        B = pb.probes.shape[0]
         self.n_gets += B
-        if with_values:
+        if pb.with_values:
             value_size = self.shards[0].cfg.value_size
             vals = np.zeros((B, value_size), np.uint8)
             for i, st in enumerate(self.shards):
-                sel = found & (owner == i)
+                sel = found & (pb.owner == i)
                 if sel.any():
                     vals[sel] = st.vlog.get_batch_np(vptr[sel])
             return found, vals
         return found, vptr
+
+    def get_batch(self, probes: np.ndarray, with_values: bool = False):
+        """Batched GET: per-shard memtable overlay (newest data wins,
+        tombstones shadow), then the snapshot path for the rest.  Returns
+        (found, shard-local vptrs) or (found, values)."""
+        return self.resolve_get(self.dispatch_get(probes, with_values))
 
     def range_query(self, start_keys: np.ndarray, length: int) -> np.ndarray:
         """Batched short scans across the partition map: each start key is

@@ -2,14 +2,20 @@
 bounded :class:`RequestQueue` + coalescing :class:`Batcher`, a
 snapshot-consistent multi-get, the epoch-invalidated
 :class:`HotKeyCache`, and the :class:`FleetMaintenanceCoordinator` that
-staggers and budgets per-shard GC/checkpointing.  See README.md in this
-package for the architecture."""
+staggers and budgets per-shard GC/checkpointing.  Two tick loops serve
+requests: the synchronous :class:`BourbonServer` and the
+:class:`PipelinedServer`, which keeps up to ``max_inflight`` read
+batches in flight (dispatch/resolve split, writes as barriers,
+maintenance in post-drain bubbles).  See README.md in this package for
+the architecture."""
 
 from .admission import Batch, Batcher, RequestQueue, ServerRequest
 from .cache import HotKeyCache
 from .coordinator import CoordinatorConfig, FleetMaintenanceCoordinator
 from .frontend import BourbonServer, ServerConfig
+from .pipeline import PipelineConfig, PipelinedServer
 
 __all__ = ["Batch", "Batcher", "BourbonServer", "CoordinatorConfig",
-           "FleetMaintenanceCoordinator", "HotKeyCache", "RequestQueue",
-           "ServerConfig", "ServerRequest"]
+           "FleetMaintenanceCoordinator", "HotKeyCache", "PipelineConfig",
+           "PipelinedServer", "RequestQueue", "ServerConfig",
+           "ServerRequest"]

@@ -43,6 +43,10 @@ class ServerRequest:
     result: np.ndarray | None = None   # (K, value_size) uint8, GETs only
     submitted_tick: int = -1
     completed_tick: int = -1
+    # the single per-shard epoch vector the GET was answered under (set by
+    # the pipelined server; None when the cache answered every key — cache
+    # entries are themselves epoch-stamped)
+    epochs_served: tuple | None = None
 
     def __post_init__(self) -> None:
         if self.op not in OPS:

@@ -141,29 +141,35 @@ class BourbonServer:
             self.served_from_cache += int(hit.sum())
         else:
             hit = np.zeros(uniq.shape[0], bool)
+            epochs = None                  # no cache: _fill_cache no-ops
         miss = ~hit
         if miss.any():
             f, v = self.store.get_batch(uniq[miss], with_values=True)
             found[miss] = f
             vals[miss] = v
             self.store_probe_keys += int(miss.sum())
-            # charge read service time to the owning shards' virtual
-            # clocks (ShardedStore.get_batch itself charges nothing), so
-            # sustained read-only load still moves time forward and
-            # maintenance/learning deadlines keep becoming due
-            owners_probed = self.store.shard_of(uniq[miss])
-            for i, sh in enumerate(self.store.shards):
-                n_i = int((owners_probed == i).sum())
-                if n_i:
-                    sh.clock.advance(n_i * sh.cfg.costs.t_pm)
-            if self.cache is not None:
-                pos = np.nonzero(miss)[0][f]
-                if pos.shape[0]:
-                    self.cache.fill(uniq[pos], vals[pos],
-                                    self.store.shard_of(uniq[pos]), epochs)
+            self._charge_read_clocks(self.store.shard_of(uniq[miss]))
+            pos = np.nonzero(miss)[0][f]
+            self._fill_cache(uniq[pos], vals[pos], epochs)
         for req, idx in zip(batch.requests, batch.scatter):
             req.found = found[idx]
             req.result = vals[idx]
+
+    def _charge_read_clocks(self, owners_probed: np.ndarray) -> None:
+        """Charge read service time to the owning shards' virtual clocks
+        (ShardedStore.get_batch itself charges nothing), so sustained
+        read-only load still moves time forward and maintenance/learning
+        deadlines keep becoming due."""
+        for i, sh in enumerate(self.store.shards):
+            n_i = int((owners_probed == i).sum())
+            if n_i:
+                sh.clock.advance(n_i * sh.cfg.costs.t_pm)
+
+    def _fill_cache(self, keys: np.ndarray, vals: np.ndarray,
+                    epochs: tuple) -> None:
+        """Admit found keys read under ``epochs`` into the HotKeyCache."""
+        if self.cache is not None and keys.shape[0]:
+            self.cache.fill(keys, vals, self.store.shard_of(keys), epochs)
 
     # ---------------------------------------------------------------- writes
     def _apply_writes(self, batch: Batch) -> None:

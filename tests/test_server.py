@@ -413,6 +413,49 @@ def test_uncoordinated_server_still_tracks_stall_metric(tmp_path):
     st.close()
 
 
+# ------------------------------------------------------------ cache (unit)
+
+def test_cache_fill_never_evicts_a_row_it_is_updating():
+    """Regression: a full cache filled with a batch mixing new keys and
+    an already-cached (oldest-stamped) key must not evict that key's row
+    for one of the new keys — the later duplicate-row write would serve
+    the old key's value under the new key."""
+    from repro.server import HotKeyCache
+    c = HotKeyCache(slots=4)
+    def v(key):
+        row = np.zeros((1, 8), np.uint8)
+        row[0, 0] = key % 251
+        return row
+    ep = (0,)
+    for k in (1, 2, 3, 4):
+        c.fill(np.array([k], np.int64), v(k), np.zeros(1, np.int64), ep)
+    # key 1 is oldest-stamped; refill it together with three new keys
+    batch = np.array([5, 6, 7, 1], np.int64)
+    vals = np.concatenate([v(5), v(6), v(7), v(1)])
+    c.fill(batch, vals, np.zeros(4, np.int64), ep)
+    out = np.zeros((4, 8), np.uint8)
+    hit = c.lookup(batch, ep, out)
+    assert hit.all()
+    assert (out[:, 0] == batch % 251).all()     # every key its own value
+
+
+def test_cache_fill_larger_than_slots_keeps_tail_and_counts_evictions():
+    """Regression: one fill with more new keys than the cache has slots
+    must not crash — the last ``slots`` pairs are admitted (what
+    sequential insertion would have kept) and the drop is counted."""
+    from repro.server import HotKeyCache
+    c = HotKeyCache(slots=8)
+    keys = np.arange(1, 13, dtype=np.int64)
+    vals = np.zeros((12, 8), np.uint8)
+    vals[:, 0] = keys
+    c.fill(keys, vals, np.zeros(12, np.int64), (0,))
+    assert len(c) == 8
+    assert c.evictions == 4
+    out = np.zeros((8, 8), np.uint8)
+    hit = c.lookup(keys[-8:], (0,), out)
+    assert hit.all() and (out[:, 0] == keys[-8:]).all()
+
+
 # ------------------------------------------------- ShardedStore satellites
 
 def test_sharded_range_query_merges_across_shard_boundaries(tmp_path):
