@@ -58,10 +58,12 @@ import time
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit
 from repro.core import LSMConfig, StoreConfig
 from repro.core.engine import EngineConfig
 from repro.distributed import ShardedConfig, ShardedStore
+from repro.obs import ObsConfig
 from repro.server import (BourbonServer, CoordinatorConfig, PipelineConfig,
                           PipelinedServer, ServerConfig, ServerRequest)
 
@@ -82,6 +84,12 @@ PIPE_ROUNDS = 8 if SMOKE else 36
 PIPE_WARM = 2 if SMOKE else 4         # untimed leading rounds per client
 MAX_INFLIGHT = 8
 PIPE_CARRY = 1
+# part A3 (obs tracing overhead): interleaved obs-on/obs-off arms at the
+# acceptance client count; best-of-N per arm absorbs scheduler noise
+OBS_CLIENTS = 64
+OBS_TRIALS = 4 if SMOKE else 3        # best-of per arm absorbs CPU noise
+OBS_ROUNDS = 16 if SMOKE else 36      # longer than PIPE_ROUNDS in smoke:
+OBS_SAMPLE_EVERY = 4                  # the 5% gate needs a stable ratio
 
 
 def _store_cfg() -> StoreConfig:
@@ -271,6 +279,83 @@ def _run_pipeline_arm(st: ShardedStore, keys: np.ndarray,
     return sync_rps, pipe_rps
 
 
+def _run_obs_arm(st: ShardedStore, keys: np.ndarray, enabled: bool,
+                 seed: int):
+    """One pipelined serving run with tracing on or off; returns
+    (reqs/s, server) — the server is kept alive so the obs-on arm's
+    snapshot/timeline can be exported after the measurement."""
+    streams = _request_streams(keys, seed=seed, clients=OBS_CLIENTS,
+                               rounds=OBS_ROUNDS,
+                               keys_per_req=PIPE_KEYS_PER_REQ)
+    srv = PipelinedServer(st, PipelineConfig(
+        max_batch_keys=1024, max_wait_ticks=0,
+        queue_capacity=2 * PIPE_DEPTH * OBS_CLIENTS,
+        max_batches_per_tick=8, max_inflight=MAX_INFLIGHT,
+        carry=PIPE_CARRY, coordinate_maintenance=True,
+        coordinator=CoordinatorConfig(budget_us_per_tick=BUDGET_US),
+        obs=ObsConfig(enabled=enabled, sample_every=OBS_SAMPLE_EVERY)))
+    rps, _, _, _ = _closed_loop_async(srv, streams, OBS_CLIENTS,
+                                      OBS_ROUNDS)
+    return rps, srv
+
+
+def _obs_overhead(st: ShardedStore, keys: np.ndarray) -> None:
+    """Part A3: the tracing-overhead acceptance arm.  Identical pipelined
+    serving runs with obs on and off, interleaved (off first, so the on
+    arm never rides a warmer store), best-of-``OBS_TRIALS`` per arm; the
+    on arm then reports the per-stage latency breakdown and the snapshot
+    + timeline land in the suite's JSON artifact."""
+    best = {"off": 0.0, "on": 0.0}
+    srv_on = None
+    for t in range(OBS_TRIALS):
+        for arm in ("off", "on"):
+            rps, srv = _run_obs_arm(st, keys, arm == "on", seed=40 + t)
+            best[arm] = max(best[arm], rps)
+            if arm == "on":
+                srv_on = srv
+    snap = srv_on.obs.snapshot()
+    for s in snap["server_stage_us"]["samples"]:
+        stage = dict(s["labels"])["stage"]
+        v = s["value"]
+        emit(f"serve/obs_stage.{stage}", v["sum"] / max(v["count"], 1),
+             f"count={v['count']} max_us={v['max']:.0f}")
+    ratio = best["on"] / max(best["off"], 1e-9)
+    emit(f"serve/obs_overhead.c{OBS_CLIENTS}", 0.0,
+         f"obs_on_rps={best['on']:.0f} obs_off_rps={best['off']:.0f} "
+         f"ratio={ratio:.3f} within_5pct={ratio >= 0.95} "
+         f"sample_every={OBS_SAMPLE_EVERY} trials={OBS_TRIALS}")
+    common.set_artifact_extra("obs", {"snapshot": snap,
+                                      "timeline": srv_on.obs.timeline()})
+
+
+def _obs_part() -> None:
+    """Self-contained store setup + part A3 (shared by the full suite
+    and the ``serve_obs`` CI gate)."""
+    rng = np.random.default_rng(1)
+    keys = rng.permutation(np.arange(1, N_KEYS + 1, dtype=np.int64) * 7)
+    d = tempfile.mkdtemp(prefix="bourbon_serve_obs_")
+    try:
+        st = _open_store(os.path.join(d, "db"), keys, n_shards=PIPE_SHARDS)
+        _load(st, keys)
+        # pre-compile the pow2 probe-pad shapes so a mid-measurement XLA
+        # compile can't skew either arm
+        rng = np.random.default_rng(4)
+        pad = 64
+        while pad <= 4096:
+            st.get_batch(rng.choice(keys, min(pad, keys.shape[0]),
+                                    replace=False), with_values=True)
+            pad *= 2
+        _obs_overhead(st, keys)
+        st.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def run_obs_only() -> None:
+    """Entry point of the ``serve_obs`` suite (the CI overhead gate)."""
+    _obs_part()
+
+
 def _overwrite_stream(keys: np.ndarray, seed: int) -> list[np.ndarray]:
     rng = np.random.default_rng(seed)
     return [rng.permutation(keys) for _ in range(4)]
@@ -371,6 +456,9 @@ def run() -> None:
         st.close()
     finally:
         shutil.rmtree(d, ignore_errors=True)
+
+    # part A3: obs tracing overhead (per-stage breakdown + 5% gate)
+    _obs_part()
 
     # part B: fleet-stall time with vs without the coordinator
     wkeys = keys[: N_KEYS // 2]

@@ -10,6 +10,7 @@ calibrated from those measurements (DESIGN.md §8.4).
 
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -19,9 +20,17 @@ from repro.core import (BourbonStore, LSMConfig, StoreConfig, make_dataset)
 from repro.core.engine import EngineConfig
 
 FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 N_KEYS = (1 << 22) if FULL else (1 << 18)
 N_OPS = (1 << 20) if FULL else (1 << 17)
 BATCH = 4096
+
+# machine-readable artifact accumulator: every emit() line is also
+# recorded here (with its k=v fields parsed) and write_artifact() dumps
+# the suite's run as BENCH_<suite>.json — the CSV stays the human view,
+# the JSON is what CI and the obs-overhead gate consume
+_RESULTS: list[dict] = []
+_EXTRA: dict = {}
 
 
 def make_store(mode="bourbon", policy="always", granularity="file",
@@ -65,5 +74,57 @@ def time_lookups(store: BourbonStore, probes: np.ndarray,
     return dt / n * 1e6
 
 
+def _parse_fields(derived: str) -> dict:
+    """Parse the free-form ``k=v`` tokens of a derived string into typed
+    fields (floats where they parse, strings otherwise)."""
+    out: dict = {}
+    for tok in derived.split():
+        if "=" not in tok:
+            continue
+        k, v = tok.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.4f},{derived}")
+    _RESULTS.append({"name": name, "us_per_call": float(us_per_call),
+                     "derived": derived, "fields": _parse_fields(derived)})
+
+
+def set_artifact_extra(key: str, value) -> None:
+    """Attach an extra JSON-serializable payload (e.g. an obs snapshot or
+    stage timeline) to the suite's artifact."""
+    _EXTRA[key] = value
+
+
+def write_artifact(suite: str) -> str | None:
+    """Dump everything emitted since the last artifact as
+    ``BENCH_<suite>.json`` under ``$REPRO_BENCH_ARTIFACTS`` (default
+    ``bench_artifacts/``; set empty to disable).  Returns the path."""
+    outdir = os.environ.get("REPRO_BENCH_ARTIFACTS", "bench_artifacts")
+    if not outdir:
+        _RESULTS.clear()
+        _EXTRA.clear()
+        return None
+    os.makedirs(outdir, exist_ok=True)
+    payload = {
+        "suite": suite,
+        "created_unix": time.time(),
+        "config": {"full": FULL, "smoke": SMOKE, "n_keys": N_KEYS,
+                   "n_ops": N_OPS, "batch": BATCH,
+                   "cpu_count": os.cpu_count()},
+        "results": list(_RESULTS),
+        **_EXTRA,
+    }
+    path = os.path.join(outdir, f"BENCH_{suite}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    _RESULTS.clear()
+    _EXTRA.clear()
+    return path

@@ -34,19 +34,31 @@ SUITES = {
               "batched request-serving front end vs naive per-request "
               "loop; pipelined (multi-batch in-flight) vs synchronous "
               "tick loop at 16/64/256 clients; fleet-stall time with vs "
-              "without the maintenance coordinator"),
+              "without the maintenance coordinator; obs-on vs obs-off "
+              "tracing overhead"),
+    # obs-only subset of serve: the CI overhead gate reruns just this
+    "serve_obs": ("bench_serve",
+                  "per-stage latency breakdown + obs-on within 5% of "
+                  "obs-off throughput at 64 clients", "run_obs_only"),
 }
 
 
 def main() -> None:
-    want = sys.argv[1:] or list(SUITES)
+    from benchmarks import common
+
+    want = sys.argv[1:] or [k for k in SUITES if k != "serve_obs"]
     print("name,us_per_call,derived")
     for key in want:
-        mod_name, desc = SUITES[key]
-        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        entry = SUITES[key]
+        mod_name, desc = entry[0], entry[1]
+        fn_name = entry[2] if len(entry) > 2 else "run"
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=[fn_name])
         t0 = time.time()
         print(f"# {key}: {desc}")
-        mod.run()
+        getattr(mod, fn_name)()
+        art = common.write_artifact(key)
+        if art:
+            print(f"# {key} artifact: {art}")
         print(f"# {key} done in {time.time() - t0:.1f}s")
 
 

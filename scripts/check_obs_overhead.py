@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""CI gate over the serve_obs artifact (BENCH_serve_obs.json).
+
+Passes iff the obs-on arm held its throughput (within_5pct on the
+``serve/obs_overhead.*`` record) AND the traced run produced a sampled
+observation for every read-path stage — a breakdown with silent stages
+would mean the tracer is wired to the wrong call sites.
+
+    python scripts/check_obs_overhead.py bench_artifacts/BENCH_serve_obs.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+# canonical stage set, kept in lockstep with repro.obs.READ_STAGES (the
+# script must stay runnable without PYTHONPATH=src, so no import)
+STAGES = ("admission", "coalesce", "cache_probe", "dispatch", "compute",
+          "resolve", "value_fetch")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "bench_artifacts/BENCH_serve_obs.json"
+    with open(path) as f:
+        art = json.load(f)
+    results = {r["name"]: r for r in art["results"]}
+
+    overhead = [r for n, r in results.items()
+                if n.startswith("serve/obs_overhead.")]
+    if not overhead:
+        print(f"FAIL: no serve/obs_overhead record in {path}")
+        return 1
+    rec = overhead[0]
+    ratio = rec["fields"].get("ratio")
+    if rec["fields"].get("within_5pct") != "True":
+        print(f"FAIL: obs-on throughput ratio {ratio} below 0.95 "
+              f"({rec['derived']})")
+        return 1
+
+    missing = [s for s in STAGES
+               if results.get(f"serve/obs_stage.{s}", {})
+               .get("fields", {}).get("count", 0) <= 0]
+    if missing:
+        print(f"FAIL: stages with no sampled observations: {missing}")
+        return 1
+
+    snap = art.get("obs", {}).get("snapshot", {})
+    if "server_stage_us" not in snap:
+        print("FAIL: artifact carries no obs snapshot")
+        return 1
+
+    print(f"OK: obs overhead ratio={ratio}, all "
+          f"{len(STAGES)} stages observed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -182,6 +182,7 @@ class MaintenanceScheduler(CostBenefitAnalyzer):
         self.gc_us = 0.0            # virtual time spent collecting
         self.gc_deferred = 0        # profitable segs pushed to a later tick
         self.last_plan_cost_us = 0.0  # estimated cost of the last candidate set
+        self.last_plan_benefit_us = 0.0  # estimated benefit of that set
         self.checkpoints = 0
         self.checkpoint_us = 0.0
         self.checkpoint_overruns = 0  # folds too big for any tick budget
@@ -243,8 +244,9 @@ class MaintenanceScheduler(CostBenefitAnalyzer):
         scored.sort(reverse=True)
         picked: list[int] = []
         plan_cost = 0.0
+        plan_benefit = 0.0
         deferred = 0
-        for _, c, seg in scored:
+        for bc, c, seg in scored:
             if len(picked) >= self.mcfg.gc_max_segments_per_tick:
                 deferred += 1
                 continue
@@ -253,6 +255,7 @@ class MaintenanceScheduler(CostBenefitAnalyzer):
                 continue
             picked.append(seg)
             plan_cost += c
+            plan_benefit += bc + c   # scored holds (B - C, C, seg)
         if deferred:
             # budget (or the per-tick cap) left profitable work behind:
             # drop the change gate so the next scan re-scores it (the
@@ -260,6 +263,7 @@ class MaintenanceScheduler(CostBenefitAnalyzer):
             self._seen_dead_version = -1
             self.gc_deferred += deferred
         self.last_plan_cost_us = plan_cost
+        self.last_plan_benefit_us = plan_benefit
         for seg in picked:
             self._last_decision.pop(seg, None)
         self.gc_decisions["collected"] += len(picked)
@@ -320,6 +324,10 @@ class LearningExecutor:
         # epochs stay unique across reopens.
         self.next_model_epoch = 0
         self._seq = itertools.count()
+        # optional obs EventLog (BourbonStore.attach_obs wires it): each
+        # job start logs a "learn" event with the CBA's cost/benefit
+        # estimates — the paper's §4.4 decision inputs, made observable
+        self.events = None
 
     def alloc_model_epoch(self) -> int:
         epoch = self.next_model_epoch
@@ -383,6 +391,13 @@ class LearningExecutor:
                     continue
                 dur = self.costs.t_build(tree.level_records(job.level))
             self.learn_time_us += dur
+            if self.events is not None:
+                prio = -job.neg_priority   # B - C (inf = always/bootstrap)
+                self.events.log(
+                    "learn", at_us=now, cost_us=dur, is_level=job.is_level,
+                    level=job.level if job.is_level else job.table.level,
+                    benefit_minus_cost_us=(None if prio == float("inf")
+                                           else prio))
             self.running.append((now + dur, job))
 
     def _fit_level(self, tree: LSMTree, level: int):

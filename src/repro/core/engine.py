@@ -111,7 +111,13 @@ class LookupResult:
     on device until first touched: callers that only want values (the
     serving hot path) never pay the extra device->host transfer, while
     the stats path (`BourbonStore._account_lookup`) materializes them
-    once, lazily, on access."""
+    once, lazily, on access.
+
+    ``n_materializations`` is a class-wide count of device->host counter
+    transfers — the observability regression tests assert that attaching
+    the metrics plane adds zero of these per batch."""
+
+    n_materializations = 0
 
     def __init__(self, found, vptr, served_level, pos_counts, neg_counts,
                  values=None):
@@ -127,12 +133,14 @@ class LookupResult:
     @property
     def pos_counts(self) -> list:
         if self._pos_np is None:
+            LookupResult.n_materializations += 1
             self._pos_np = [np.asarray(p) for p in self._pos_dev]
         return self._pos_np
 
     @property
     def neg_counts(self) -> list:
         if self._neg_np is None:
+            LookupResult.n_materializations += 1
             self._neg_np = [np.asarray(n) for n in self._neg_dev]
         return self._neg_np
 
@@ -258,6 +266,14 @@ class LookupEngine:
         # stamp for level models that arrive without an epoch: unique,
         # decreasing, never reused — store-fit models carry epochs >= 0
         self._unstamped_epoch = -2
+        # per-level (model_probes, baseline_probes) attribution, computed
+        # in-graph and accumulated as a single (N_LEVELS, 2) device add
+        # per dispatched batch — never synced to the host until
+        # probe_split_np() (the obs snapshot path) asks.  Off by default:
+        # BourbonStore.attach_obs flips it on
+        self.record_probe_split = False
+        self.probe_split_acc = None
+        self.probe_acc_materializations = 0   # host syncs of the acc
 
     # ---------------------------------------------------------------- build
     def _build_level(self, tables, cfg: EngineConfig) -> DeviceLevel:
@@ -543,7 +559,28 @@ class LookupEngine:
                 found = found | hit
             pos_counts.append(pos_c)
             neg_counts.append(neg_c)
-        return found, vptr, served, tuple(pos_counts), tuple(neg_counts)
+        # per-level model-path vs baseline-path attribution, in-graph so
+        # the host never has to materialize the per-file vectors: mirrors
+        # BourbonStore._account_lookup's has-model rule per engine mode
+        mps, bps = [], []
+        for li in range(N_LEVELS):
+            lv = state.levels[li]
+            tot_f = (pos_counts[li] + neg_counts[li]).astype(jnp.int64)
+            tot = jnp.sum(tot_f)
+            if mode == "baseline":
+                mp = jnp.int64(0)
+            elif mode == "model_pure":
+                mp = tot
+            elif mode == "level" and li > 0:
+                mp = jnp.where(state.level_models[li].nseg > 0, tot,
+                               jnp.int64(0))
+            else:   # mixed per-file arm (L0 in every mode, 'model' levels)
+                mp = jnp.sum(jnp.where(lv.nseg > 0, tot_f, jnp.int64(0)))
+            mps.append(mp)
+            bps.append(tot - mp)
+        probe_split = jnp.stack([jnp.stack(mps), jnp.stack(bps)], axis=1)
+        return (found, vptr, served, tuple(pos_counts), tuple(neg_counts),
+                probe_split)
 
     @staticmethod
     def state_signature(state: DeviceState) -> tuple:
@@ -578,8 +615,14 @@ class LookupEngine:
         while this one computes; `PendingLookup.resolve()` blocks."""
         B = probes.shape[0]
         fn = self._jitted_lookup(state, B, mode, l0_live)
-        found, vptr, served, pos_c, neg_c = fn(
+        found, vptr, served, pos_c, neg_c, probe_split = fn(
             state, jnp.asarray(probes, jnp.int64))
+        if self.record_probe_split:
+            # one async device-side add per batch; the running total is
+            # synced to the host only when probe_split_np() is called
+            self.probe_split_acc = (
+                probe_split if self.probe_split_acc is None
+                else self.probe_split_acc + probe_split)
         values = None
         if self.cfg.fetch_values and vlog is not None:
             dv = vlog.device_view()
@@ -590,3 +633,13 @@ class LookupEngine:
     def lookup(self, state: DeviceState, probes: np.ndarray, mode: str,
                vlog=None, l0_live: int | None = None) -> LookupResult:
         return self.lookup_async(state, probes, mode, vlog, l0_live).resolve()
+
+    def probe_split_np(self) -> np.ndarray:
+        """Materialize the accumulated per-level (model, baseline) probe
+        counts — ONE device->host sync, meant for the snapshot path only
+        (``probe_acc_materializations`` counts these so tests can assert
+        the hot path never pays it)."""
+        if self.probe_split_acc is None:
+            return np.zeros((N_LEVELS, 2), np.int64)
+        self.probe_acc_materializations += 1
+        return np.asarray(self.probe_split_acc)

@@ -23,6 +23,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import NULL_HANDLE, publish_stats
+
 from .cba import (CBAConfig, LearningExecutor, MaintenanceConfig,
                   MaintenanceScheduler)
 from .clock import CostModel, VirtualClock
@@ -123,6 +125,12 @@ class BourbonStore:
         # with a per-tick budget (repro.server.FleetMaintenanceCoordinator)
         self.maintenance_deferred = False
         self.last_maintenance_us = 0.0   # virtual cost of the last round
+        # observability (repro.obs): attach_obs wires these; the defaults
+        # are null objects so the hot paths never branch on "obs on?"
+        self._obs = None
+        self._obs_labels: dict = {}
+        self._obs_events = None
+        self._vf = NULL_HANDLE           # value-fetch stage handle
         self.auto_gc_stats = {"runs": 0, "segments_removed": 0,
                               "bytes_reclaimed": 0, "entries_moved": 0}
         if cfg.storage_dir is not None:
@@ -437,6 +445,13 @@ class BourbonStore:
                     for k in ("segments_removed", "bytes_reclaimed",
                               "entries_moved"):
                         self.auto_gc_stats[k] += res[k]
+                    if self._obs_events is not None:
+                        self._obs_events.log(
+                            "gc", at_us=self.clock.now,
+                            candidates=len(segs),
+                            cost_us=self.cba.last_plan_cost_us,
+                            benefit_us=self.cba.last_plan_benefit_us,
+                            **res, **self._obs_labels)
             if (not self._storage.in_recovery and self.cba.should_checkpoint(
                     self._storage.manifest_tail_bytes())):
                 # the fold rewrites the whole live state, so its cost is
@@ -459,6 +474,11 @@ class BourbonStore:
                     self.cba.checkpoints += 1
                     self.cba.checkpoint_us += cost
                     self.clock.advance(cost)
+                    if self._obs_events is not None:
+                        self._obs_events.log(
+                            "checkpoint", at_us=self.clock.now,
+                            cost_us=cost, folded_bytes=folded,
+                            **self._obs_labels)
         finally:
             self._in_maintenance = False
         self.last_maintenance_us = self.clock.now - t0
@@ -540,7 +560,10 @@ class BourbonStore:
         self.clock.advance(0.0)  # time added in _account_lookup
         self._tick()
         if self.cfg.fetch_values:
-            return found, self.vlog.get_batch_np(vptr)
+            t0 = self._vf.begin()
+            vals = self.vlog.get_batch_np(vptr)
+            self._vf.end(t0)
+            return found, vals
         return found, vptr
 
     def get_batch(self, probes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -796,6 +819,74 @@ class BourbonStore:
             self._tick()
         return self.executor.jobs_done - done0
 
+    # -------------------------------------------------------------------- obs
+    def attach_obs(self, obs, labels: dict | None = None) -> None:
+        """Join an :class:`repro.obs.Obs` plane: register a snapshot-time
+        collector (keyed on the labels, so a store reopening with the
+        same labels replaces its stale predecessor instead of
+        double-reporting), route maintenance/learning decisions into the
+        event log, enable the engine's in-graph probe-split accumulator,
+        and pre-bind the value-fetch stage handle.  Nothing here touches
+        the read hot path beyond one extra async device add per batch."""
+        self._obs = obs
+        self._obs_labels = dict(labels or {})
+        self._obs_events = obs.events
+        self.executor.events = obs.events
+        self.engine.record_probe_split = True
+        self._vf = obs.tracer.stage("value_fetch")
+        key = ("store", tuple(sorted(self._obs_labels.items())))
+        obs.registry.register_collector(key, self._collect_obs)
+
+    def detach_obs(self) -> None:
+        """Undo :meth:`attach_obs`: restore the null handles so the hot
+        path records nothing, disable the probe-split accumulator, and
+        drop this store's collector from the registry.  A later
+        attach_obs (same or different plane) starts clean."""
+        if self._obs is not None:
+            self._obs.registry.unregister_collector(
+                ("store", tuple(sorted(self._obs_labels.items()))))
+        self._obs = None
+        self._obs_labels = {}
+        self._obs_events = None
+        self.executor.events = None
+        self.engine.record_probe_split = False
+        self._vf = NULL_HANDLE
+
+    def _collect_obs(self, reg) -> None:
+        """Snapshot-time collector: curated monotonic counters (restart-
+        safe across reopen via observe_total), per-level gauges, the
+        lazily-materialized engine probe split, and the full ``stats()``
+        dict flattened so no metric is lost in the migration."""
+        lb = self._obs_labels
+        c = reg.counter
+        c("store_gets_total", **lb).observe_total(self.n_gets)
+        c("store_puts_total", **lb).observe_total(self.n_puts)
+        c("store_files_learned_total", **lb).observe_total(
+            self.executor.files_learned)
+        c("store_lookups_model_path_total", **lb).observe_total(
+            self.lookups_model_path)
+        c("store_lookups_baseline_path_total", **lb).observe_total(
+            self.lookups_baseline_path)
+        c("store_gc_us_total", **lb).observe_total(self.cba.gc_us)
+        c("store_checkpoints_total", **lb).observe_total(self.cba.checkpoints)
+        # per-level model-path vs baseline-path probe attribution: ONE
+        # device->host sync for the whole accumulated history (satellite
+        # of the lazy LookupResult pattern — the hot path never syncs)
+        split = self.engine.probe_split_np()
+        for li in range(N_LEVELS):
+            c("engine_probes_total", level=str(li), path="model",
+              **lb).observe_total(int(split[li, 0]))
+            c("engine_probes_total", level=str(li), path="baseline",
+              **lb).observe_total(int(split[li, 1]))
+        g = reg.gauge
+        for li, tables in enumerate(self.tree.levels):
+            g("store_level_files", level=str(li), **lb).set(len(tables))
+            g("store_level_records", level=str(li), **lb).set(
+                sum(t.n for t in tables))
+            g("store_level_learned", level=str(li), **lb).set(
+                sum(1 for t in tables if t.model is not None))
+        publish_stats(reg, "store", self.stats(), lb)
+
     # ------------------------------------------------------------------ stats
     def stats(self) -> dict:
         files = list(self.tree.all_files())
@@ -810,6 +901,8 @@ class BourbonStore:
         out = {
             "n_files": len(files),
             "n_records": self.tree.total_records(),
+            "n_gets": self.n_gets,
+            "n_puts": self.n_puts,
             "n_learned": n_learned,
             "model_bytes": model_bytes,
             "data_bytes": data_bytes,

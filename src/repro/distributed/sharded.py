@@ -54,6 +54,7 @@ from repro.core.jaxcompat import make_mesh, set_mesh
 from repro.core.lsm import LSMConfig
 from repro.core.plr import greedy_plr_np
 from repro.core.store import BourbonStore, StoreConfig
+from repro.obs import NULL_HANDLE, publish_stats
 from repro.storage.format import fsync_dir, sst_path
 from repro.storage.manifest import read_manifest
 from repro.storage.sstable_io import load_sstable
@@ -199,6 +200,10 @@ class ShardedStore:
         self._state_epochs = None
         self.state_epoch = 0          # bumps whenever the device state refreshes
         self.n_gets = 0
+        # observability (repro.obs) — attach_obs wires these; null objects
+        # keep the resolve hot path branch-free when obs is off
+        self._obs = None
+        self._vf = NULL_HANDLE
 
     # ------------------------------------------------------------- lifecycle
     @classmethod
@@ -482,10 +487,12 @@ class ShardedStore:
         if pb.with_values:
             value_size = self.shards[0].cfg.value_size
             vals = np.zeros((B, value_size), np.uint8)
+            t0 = self._vf.begin()
             for i, st in enumerate(self.shards):
                 sel = found & (pb.owner == i)
                 if sel.any():
                     vals[sel] = st.vlog.get_batch_np(vptr[sel])
+            self._vf.end(t0)
             return found, vals
         return found, vptr
 
@@ -522,6 +529,41 @@ class ShardedStore:
                 s += 1
         return out
 
+    # ------------------------------------------------------------------- obs
+    def attach_obs(self, obs) -> None:
+        """Join the fleet to one observability plane: every shard reports
+        into the shared registry under its own ``shard=<i>`` label (so
+        the per-shard breakdown survives aggregation), the distributed
+        value-fetch is timed under the same ``value_fetch`` stage the
+        single-store path uses, and a fleet-level collector publishes the
+        cross-shard aggregates."""
+        self._obs = obs
+        self._vf = obs.tracer.stage("value_fetch")
+        for i, st in enumerate(self.shards):
+            st.attach_obs(obs, labels={"shard": str(i)})
+        obs.registry.register_collector(("fleet", self.path),
+                                        self._collect_obs)
+
+    def detach_obs(self) -> None:
+        """Undo :meth:`attach_obs` fleet-wide (a fresh server with its
+        own obs plane — or none — can then take over cleanly)."""
+        if self._obs is not None:
+            self._obs.registry.unregister_collector(("fleet", self.path))
+        self._obs = None
+        self._vf = NULL_HANDLE
+        for st in self.shards:
+            st.detach_obs()
+
+    def _collect_obs(self, reg) -> None:
+        reg.counter("fleet_gets_total").observe_total(self.n_gets)
+        reg.gauge("fleet_state_epoch").set(self.state_epoch)
+        for i, ep in enumerate(self._shard_epochs()):
+            reg.gauge("fleet_shard_epoch", shard=str(i)).set(ep)
+        # fleet aggregates; the per-shard dicts are already published by
+        # each shard's own labeled collector — don't double-report them
+        publish_stats(reg, "fleet", self.stats(),
+                      skip=("shards", "per_shard"))
+
     # ----------------------------------------------------------------- stats
     def stats(self) -> dict:
         per = [st.stats() for st in self.shards]
@@ -555,5 +597,27 @@ class ShardedStore:
             "checkpoint_us": sum(st.cba.checkpoint_us for st in self.shards),
             "maintenance_us": self.maintenance_us(),
             "shards": per,
+            # labeled per-shard breakdown: the aggregate sums above erase
+            # which shard did the work; this keyed view preserves it (and
+            # flattens into `key="shard-<i>"`-labeled gauges through the
+            # obs registry)
+            "per_shard": {
+                f"shard-{i}": {
+                    "n_records": p["n_records"],
+                    "n_files": p["n_files"],
+                    "files_learned": p["files_learned"],
+                    "gc_us": p.get("gc_us", 0.0),
+                    "checkpoint_us": self.shards[i].cba.checkpoint_us,
+                    "maintenance_us": (self.shards[i].cba.gc_us
+                                       + self.shards[i].cba.checkpoint_us),
+                    "auto_gc": dict(p.get("auto_gc", {})),
+                    "vlog_disk_bytes": p.get("vlog_disk_bytes", 0),
+                    "vlog_segments_removed": p.get(
+                        "vlog_segments_removed", 0),
+                    "manifest_checkpoints": p.get("manifest_checkpoints", 0),
+                    "epoch": len(self.shards[i].tree.events),
+                }
+                for i, p in enumerate(per)
+            },
         }
         return agg

@@ -1,0 +1,73 @@
+"""End-to-end observability plane (see README.md in this package).
+
+One :class:`Obs` bundle per serving stack: a labeled
+:class:`MetricsRegistry` every layer reports into (collectors replace
+the scattered ``stats()`` dicts at snapshot time), a sampling
+:class:`StageTracer` timing the read-path stages through pre-bound
+handles, and an :class:`EventLog` of maintenance decisions with their
+CBA cost/benefit estimates.  ``Obs.snapshot()`` is the one call that
+yields the whole fleet's metrics; exporters render it as JSON,
+Prometheus text, or the per-tick stage timeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .export import parse_prometheus, to_json, to_prometheus
+from .registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                       publish_stats)
+from .tracer import (EventLog, NullTracer, StageHandle, StageTracer,
+                     NULL_HANDLE, NULL_TRACER)
+
+__all__ = ["Counter", "EventLog", "Gauge", "Histogram", "MetricsRegistry",
+           "NullTracer", "Obs", "ObsConfig", "StageHandle", "StageTracer",
+           "NULL_HANDLE", "NULL_TRACER", "parse_prometheus", "publish_stats",
+           "to_json", "to_prometheus"]
+
+# canonical read-path stage names (the §3-style decomposition the serve
+# bench reports); layers pre-bind handles for exactly these
+READ_STAGES = ("admission", "coalesce", "cache_probe", "dispatch",
+               "compute", "resolve", "value_fetch")
+
+
+@dataclasses.dataclass
+class ObsConfig:
+    enabled: bool = True
+    # time stages on every Nth server tick (1 = every tick); unsampled
+    # ticks cost one attribute read per stage call
+    sample_every: int = 4
+    timeline_ticks: int = 512    # per-tick stage rows kept in the ring
+    events_cap: int = 1024       # maintenance events kept
+
+
+class Obs:
+    """The per-stack observability bundle: registry + tracer + events."""
+
+    def __init__(self, cfg: ObsConfig | None = None) -> None:
+        self.cfg = cfg if cfg is not None else ObsConfig()
+        self.registry = MetricsRegistry()
+        self.tracer = StageTracer(self.registry,
+                                  sample_every=self.cfg.sample_every,
+                                  timeline_ticks=self.cfg.timeline_ticks)
+        self.events = EventLog(self.cfg.events_cap)
+        self.registry.register_collector("obs_self", self._collect)
+
+    def _collect(self, reg: MetricsRegistry) -> None:
+        reg.counter("obs_events_total").observe_total(self.events.total)
+        reg.counter("obs_ticks_seen_total").observe_total(
+            self.tracer.ticks_seen)
+        reg.counter("obs_sampled_ticks_total").observe_total(
+            self.tracer.sampled_ticks)
+
+    def snapshot(self) -> dict:
+        return self.registry.snapshot()
+
+    def to_json(self) -> str:
+        return to_json(self.snapshot())
+
+    def to_prometheus(self) -> str:
+        return to_prometheus(self.snapshot())
+
+    def timeline(self) -> list[dict]:
+        return self.tracer.timeline()

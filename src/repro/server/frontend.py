@@ -25,6 +25,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import NULL_TRACER, Obs, ObsConfig, publish_stats
+
 from .admission import Batch, Batcher, RequestQueue, ServerRequest
 from .cache import HotKeyCache
 from .coordinator import CoordinatorConfig, FleetMaintenanceCoordinator
@@ -46,6 +48,11 @@ class ServerConfig:
     coordinate_maintenance: bool = True
     coordinator: CoordinatorConfig = dataclasses.field(
         default_factory=CoordinatorConfig)
+    # observability plane (repro.obs): the server owns one Obs bundle,
+    # attaches the whole store fleet to it, and times the read-path
+    # stages through pre-bound handles.  enabled=False skips everything
+    # (null objects on the hot path — the obs-off bench arm)
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
 
 
 class BourbonServer:
@@ -69,12 +76,37 @@ class BourbonServer:
         self.max_maintenance_tick_us = 0.0
         self._maint_us_seen = store.maintenance_us()
         self._value_size = store.shards[0].cfg.value_size
+        # observability: one Obs bundle per server; stage handles are
+        # pre-bound here so the per-batch cost is attribute reads only.
+        # Obs-off servers hold the null tracer — same call sites, no
+        # branches, (near-)zero cost: the bench's obs-off arm
+        self.obs = Obs(self.cfg.obs) if self.cfg.obs.enabled else None
+        tr = self.obs.tracer if self.obs is not None else NULL_TRACER
+        self._tr = tr
+        self._st_admission = tr.stage("admission")
+        self._st_coalesce = tr.stage("coalesce")
+        self._st_cache = tr.stage("cache_probe")
+        self._st_dispatch = tr.stage("dispatch")
+        self._st_compute = tr.stage("compute")
+        self._st_resolve = tr.stage("resolve")
+        if self.obs is not None:
+            store.attach_obs(self.obs)
+            self.obs.registry.register_collector("server",
+                                                 self._collect_obs)
+        else:
+            # an obs-off server must serve a truly uninstrumented store,
+            # even one a previous (obs-on) server attached: the overhead
+            # bench compares clean arms
+            store.detach_obs()
 
     # ------------------------------------------------------------ admission
     def submit(self, req: ServerRequest) -> bool:
         """Enqueue a request; False means the queue is full (backpressure —
         retry after a tick)."""
-        return self.queue.submit(req, self.ticks)
+        t0 = self._st_admission.begin()
+        ok = self.queue.submit(req, self.ticks)
+        self._st_admission.end(t0)
+        return ok
 
     # ----------------------------------------------------------------- tick
     def tick(self) -> list[ServerRequest]:
@@ -82,8 +114,11 @@ class BourbonServer:
         coalesced batches, then run one maintenance-coordination round.
         Returns the requests completed this tick."""
         done: list[ServerRequest] = []
+        tick_no = self._tr.begin_tick()
         for _ in range(self.cfg.max_batches_per_tick):
+            t0 = self._st_coalesce.begin()
             batch = self.batcher.next_batch(self.queue, self.ticks)
+            self._st_coalesce.end(t0)
             if batch is None:
                 break
             if batch.op == "get":
@@ -114,6 +149,7 @@ class BourbonServer:
             r.completed_tick = self.ticks
             r.done = True
         self.completed += len(done)
+        self._tr.end_tick(tick_no)
         self.ticks += 1
         return done
 
@@ -136,7 +172,9 @@ class BourbonServer:
             # writes flush/compact), so one capture stamps both the cache
             # probe and the fill below
             epochs = self.store.shard_epochs()
+            t0 = self._st_cache.begin()
             hit = self.cache.lookup(uniq, epochs, vals)
+            self._st_cache.end(t0)
             found |= hit
             self.served_from_cache += int(hit.sum())
         else:
@@ -144,7 +182,18 @@ class BourbonServer:
             epochs = None                  # no cache: _fill_cache no-ops
         miss = ~hit
         if miss.any():
-            f, v = self.store.get_batch(uniq[miss], with_values=True)
+            # the synchronous path still splits dispatch from resolve so
+            # the stage breakdown is comparable with the pipelined
+            # server's; "compute" here is the whole dispatch->resolve
+            # span (nothing overlaps it)
+            tc = self._st_compute.begin()
+            t0 = self._st_dispatch.begin()
+            pb = self.store.dispatch_get(uniq[miss], with_values=True)
+            self._st_dispatch.end(t0)
+            t0 = self._st_resolve.begin()
+            f, v = self.store.resolve_get(pb)
+            self._st_resolve.end(t0)
+            self._st_compute.end(tc)
             found[miss] = f
             vals[miss] = v
             self.store_probe_keys += int(miss.sum())
@@ -179,6 +228,30 @@ class BourbonServer:
             self.store.delete_batch(batch.keys)
         if self.cache is not None:
             self.cache.invalidate(batch.keys)
+
+    # ------------------------------------------------------------------- obs
+    def _collect_obs(self, reg) -> None:
+        """Snapshot-time collector: curated monotonic counters for the
+        serving totals, then the whole layered ``stats()`` dict (minus
+        the store subtree, which the store/fleet collectors already
+        publish under their own shard labels) flattened into gauges."""
+        c = reg.counter
+        c("server_submitted_total").observe_total(self.queue.submitted)
+        c("server_rejected_total").observe_total(self.queue.rejected)
+        c("server_completed_total").observe_total(self.completed)
+        c("server_ticks_total").observe_total(self.ticks)
+        c("server_batches_total").observe_total(self.batcher.batches)
+        c("server_served_from_cache_total").observe_total(
+            self.served_from_cache)
+        c("server_store_probe_keys_total").observe_total(
+            self.store_probe_keys)
+        if self.cache is not None:
+            cs = self.cache.stats()
+            for k in ("hits", "misses", "fills", "evictions",
+                      "inval_epoch", "inval_write"):
+                c(f"cache_{k}_total").observe_total(cs[k])
+        s = {k: v for k, v in self.stats().items() if k != "store"}
+        publish_stats(reg, "server", s)
 
     # ----------------------------------------------------------------- stats
     def stats(self) -> dict:

@@ -79,6 +79,10 @@ class _InflightRead:
     miss: np.ndarray           # (U,) keys the store is answering
     pending: object            # ShardPendingBatch (store dispatch handle)
     dispatch_tick: int
+    # obs: wall stamp from the compute stage handle at dispatch (0.0 when
+    # the tick is unsampled) — "compute" is the in-flight span, the time
+    # the device had to finish the batch before resolve blocked on it
+    t_dispatch: float = 0.0
 
 
 class PipelinedServer(BourbonServer):
@@ -117,6 +121,7 @@ class PipelinedServer(BourbonServer):
         has been overlapped with the device compute.  Returns the
         requests completed this tick."""
         done: list[ServerRequest] = []
+        tick_no = self._tr.begin_tick()
         admitted = 0
         while admitted < self.cfg.max_batches_per_tick:
             head = self.queue.head()
@@ -124,7 +129,9 @@ class PipelinedServer(BourbonServer):
                 break
             if head.op == "get" and len(self._inflight) >= self.cfg.max_inflight:
                 break                       # pipeline full: backpressure
+            t0 = self._st_coalesce.begin()
             batch = self.batcher.next_batch(self.queue, self.ticks)
+            self._st_coalesce.end(t0)
             if batch is None:
                 break                       # batcher holding a partial run
             if batch.op == "get":
@@ -169,6 +176,7 @@ class PipelinedServer(BourbonServer):
             r.completed_tick = self.ticks
             r.done = True
         self.completed += len(done)
+        self._tr.end_tick(tick_no)
         self.ticks += 1
         return done
 
@@ -190,7 +198,9 @@ class PipelinedServer(BourbonServer):
         vals = np.zeros((uniq.shape[0], self._value_size), np.uint8)
         found = np.zeros(uniq.shape[0], bool)
         if self.cache is not None:
+            t0 = self._st_cache.begin()
             hit = self.cache.lookup(uniq, self.store.shard_epochs(), vals)
+            self._st_cache.end(t0)
             found |= hit
             self.served_from_cache += int(hit.sum())
         else:
@@ -199,7 +209,9 @@ class PipelinedServer(BourbonServer):
         if not miss.any():
             self.cache_only_batches += 1
             return self._scatter(batch, found, vals, epochs=None)
+        t0 = self._st_dispatch.begin()
         pb = self.store.dispatch_get(uniq[miss], with_values=True)
+        self._st_dispatch.end(t0)
         completed: list[ServerRequest] = []
         if (self._inflight
                 and pb.epochs != self._inflight[0].pending.epochs):
@@ -210,7 +222,8 @@ class PipelinedServer(BourbonServer):
             self.epoch_violations += 1
             completed = self._drain()
         self._inflight.append(_InflightRead(batch, found, vals, miss, pb,
-                                            self.ticks))
+                                            self.ticks,
+                                            self._st_compute.begin()))
         self.batches_dispatched += 1
         self.max_depth_seen = max(self.max_depth_seen, len(self._inflight))
         return completed
@@ -218,7 +231,13 @@ class PipelinedServer(BourbonServer):
     def _retire(self, fl: _InflightRead) -> list[ServerRequest]:
         """Resolve one in-flight batch (the only blocking point) and fan
         the results back out."""
+        t0 = self._st_resolve.begin()
         f, v = self.store.resolve_get(fl.pending)
+        self._st_resolve.end(t0)
+        # compute = dispatch->retire in-flight span: how long the device
+        # had before the host blocked on this batch (crosses ticks; the
+        # handle no-ops when the dispatch tick was unsampled)
+        self._st_compute.end(fl.t_dispatch)
         fl.found[fl.miss] = f
         fl.vals[fl.miss] = v
         self.store_probe_keys += int(fl.miss.sum())
