@@ -122,9 +122,19 @@ def write_artifact(suite: str) -> str | None:
     }
     path = os.path.join(outdir, f"BENCH_{suite}.json")
     tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
+    try:
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        # a crashed/killed bench run must not leave a torn tmp behind
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     _RESULTS.clear()
     _EXTRA.clear()
     return path

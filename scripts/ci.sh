@@ -7,6 +7,21 @@ cd "$(dirname "$0")/.."
 python -m pip install -r requirements-dev.txt || \
     echo "WARN: pip install failed (offline?) — continuing with baked-in deps"
 
+# static gates first — they are the cheapest and name the invariant they
+# guard (see src/repro/analysis/README.md):
+#   bourbonlint: zero unbaselined findings on src/repro, and no module
+#   outside the dead-module allowlist may be unreachable
+python scripts/lint.py --baseline .bourbonlint-baseline.json
+python scripts/lint.py --report dead-modules
+# mypy: strict on repro.analysis, checked on storage/obs (mypy.ini); the
+# baked-in image may not ship mypy — warn-skip rather than install
+if python -c "import mypy" 2>/dev/null; then
+    python -m mypy --config-file mypy.ini \
+        src/repro/analysis src/repro/storage src/repro/obs
+else
+    echo "WARN: mypy not installed — skipping type gate"
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 # exercise the maintenance-scheduler path end to end (auto value-log GC +

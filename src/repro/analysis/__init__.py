@@ -1,0 +1,40 @@
+"""bourbonlint — static invariant checks for the Bourbon reproduction.
+
+``python scripts/lint.py`` (or ``python -m repro.analysis``) runs the
+five rules over ``src/repro``; see README.md in this package for the
+rule table and the suppression/baseline workflow.
+"""
+
+from .core import (Finding, Rule, SourceFile, apply_baseline, load_baseline,
+                   make_baseline, run_lint, save_baseline, SUPPRESS)
+from .deadmod import DEAD_MODULE_ALLOWLIST, dead_module_report
+from .durorder import DurabilityOrderRule
+from .hotsync import HotSyncRule
+from .jitdisc import JitDisciplineRule
+from .obsdrift import ObsDriftRule
+from .pairing import PairingRule
+
+ALL_RULES = ("HOTSYNC", "DURORDER", "JITDISC", "PAIRING", "OBSDRIFT")
+
+__all__ = ["Finding", "Rule", "SourceFile", "run_lint", "default_rules",
+           "ALL_RULES", "load_baseline", "save_baseline", "make_baseline",
+           "apply_baseline", "dead_module_report", "DEAD_MODULE_ALLOWLIST",
+           "HotSyncRule", "DurabilityOrderRule", "JitDisciplineRule",
+           "PairingRule", "ObsDriftRule", "SUPPRESS"]
+
+
+def default_rules(root: str, only=None):
+    """The production rule set, calibrated against this repo (OBSDRIFT
+    reads the live declarations under ``root``).  ``only`` filters by
+    rule id."""
+    rules = [
+        HotSyncRule(),
+        DurabilityOrderRule(),
+        JitDisciplineRule(),
+        PairingRule(),
+        ObsDriftRule.from_root(root),
+    ]
+    if only:
+        wanted = {r.upper() for r in only}
+        rules = [r for r in rules if r.id in wanted]
+    return rules

@@ -1,0 +1,142 @@
+"""Dead-module report: import-graph reachability over ``repro``.
+
+The seed dropped ~90 files into ``src/repro``; the storage/serving PRs
+since then built on a subset.  Anything not importable from the roots —
+``repro/__init__``, the test suite, the benchmarks, the scripts — is
+dead weight that masks real dead code in review.  This pass parses the
+imports of every ``.py`` file (AST only, nothing is executed), resolves
+``repro.*`` absolute and relative imports to files, and BFSes from the
+roots.  Unreached ``src/repro`` modules are reported; known seed
+leftovers live in an explicit allowlist (quarantined, reported but not
+failing) so a *new* module going dark is always a hard finding.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+# Seed leftovers that are knowingly unreferenced.  Anything matching one
+# of these prefixes (module path form, e.g. "repro/models") is reported
+# as quarantined instead of failing the report.  Trim this list as the
+# modules are either deleted or wired back in.
+DEAD_MODULE_ALLOWLIST: tuple = (
+    # per-arch config modules are loaded dynamically by
+    # repro.configs.base.get_config via importlib — invisible to the
+    # static import graph, exercised by tests/test_archs_smoke.py
+    "repro/configs",
+    # `python -m` CLI entrypoints from the seed's training substrate;
+    # nothing imports them (dryrun is spawned by scripts/make_experiments
+    # as a subprocess) and the serving stack has superseded them
+    "repro/launch/dryrun",
+    "repro/launch/serve",
+    "repro/launch/train",
+)
+
+
+def _module_name(relpath: str) -> str:
+    """src/repro/a/b.py -> repro.a.b ; packages use their __init__."""
+    p = relpath.replace(os.sep, "/")
+    if p.endswith("/__init__.py"):
+        p = p[: -len("/__init__.py")]
+    elif p.endswith(".py"):
+        p = p[:-3]
+    return p.replace("/", ".")
+
+
+def _iter_py(root, sub):
+    base = os.path.join(root, sub)
+    if not os.path.isdir(base):
+        return
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = sorted(d for d in dirnames
+                             if not d.startswith(".") and d != "__pycache__")
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                yield os.path.join(dirpath, name)
+
+
+def _imports_of(path: str, modname: str):
+    """Absolute module names this file imports (repro.* resolved, incl.
+    relative imports and `from pkg import name` where name is a module)."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            tree = ast.parse(f.read())
+    except (OSError, SyntaxError):
+        return []
+    out = []
+    pkg_parts = modname.split(".")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out.append(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                # containing package, then (level-1) more hops up
+                pkg = pkg_parts if path.endswith("__init__.py") \
+                    else pkg_parts[:-1]
+                base = pkg[: len(pkg) - (node.level - 1)]
+                mod = ".".join(base + ([node.module] if node.module else []))
+            else:
+                mod = node.module or ""
+            if mod:
+                out.append(mod)
+                for alias in node.names:
+                    out.append(f"{mod}.{alias.name}")
+    return out
+
+
+def dead_module_report(root: str, allowlist=DEAD_MODULE_ALLOWLIST) -> dict:
+    """Compute reachability.  Returns ``{"dead": [...], "quarantined":
+    [...], "reachable": int, "roots": int}`` with module names relative
+    to ``src`` (e.g. ``repro.models.resnet``)."""
+    src = os.path.join(root, "src")
+    modules: dict[str, str] = {}      # module name -> file path
+    for path in _iter_py(root, "src"):
+        modules[_module_name(os.path.relpath(path, src))] = path
+
+    # roots: the package itself + every test/bench/script/example file
+    root_files = []
+    for sub in ("tests", "benchmarks", "scripts", "examples"):
+        root_files.extend(_iter_py(root, sub))
+
+    reached: set = set()
+    queue: list = []
+
+    def reach(mod: str):
+        """Mark mod and its package __init__ chain reached."""
+        parts = mod.split(".")
+        for i in range(1, len(parts) + 1):
+            name = ".".join(parts[:i])
+            if name in modules and name not in reached:
+                reached.add(name)
+                queue.append(name)
+
+    reach("repro")
+    for path in root_files:
+        modname = "__root__." + _module_name(
+            os.path.relpath(path, root)).replace(os.sep, ".")
+        for imp in _imports_of(path, modname):
+            if imp.split(".")[0] == "repro":
+                reach(imp)
+
+    while queue:
+        mod = queue.pop()
+        path = modules[mod]
+        for imp in _imports_of(path, mod):
+            if imp.split(".")[0] == "repro":
+                reach(imp)
+
+    dead, quarantined = [], []
+    for mod in sorted(modules):
+        if mod in reached:
+            continue
+        slashed = mod.replace(".", "/")
+        if any(slashed == al or slashed.startswith(al + "/")
+               for al in allowlist):
+            quarantined.append(mod)
+        else:
+            dead.append(mod)
+    return {"dead": dead, "quarantined": quarantined,
+            "reachable": len(reached), "total": len(modules),
+            "roots": len(root_files)}

@@ -1,0 +1,189 @@
+"""HOTSYNC — no blocking device→host transfers on registered hot paths.
+
+The paper's §4–§5 point is that learned-index lookup wins are measured
+in microseconds; one stray `np.asarray(device_value)` forces the JAX
+async dispatch queue to drain and erases them.  PR 5 split lookup into
+dispatch/resolve halves precisely so the only blocking sync is the one
+inside ``resolve_get``; this rule pins that property statically.
+
+Model: a simple per-function taint pass.  Values produced by ``jnp.*``
+/ ``jax.*`` calls, by configured producer calls (``lookup_async``,
+``device_view``, …) or configured device-attribute reads (``.f_dev``,
+``._pos_dev``, …) are *device-tainted*; taint propagates through
+assignments (incl. tuple unpacking).  Inside a registered hot function,
+
+* ``jax.device_get(...)`` and ``.block_until_ready()`` are flagged
+  unconditionally, and
+* ``np.asarray`` / ``np.array`` / ``float()`` / ``int()`` / ``.item()``
+  are flagged only when their argument is tainted — host-side numpy math
+  on the hot path is fine and common.
+
+``resolve_*`` functions are the designated sync point for their pending
+argument: transfers whose argument is (an attribute/subscript of) the
+first non-self parameter are permitted there.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Finding, Rule, SourceFile, dotted, match_hot
+
+# (class_glob, func_glob) pairs — the registered hot paths from the
+# issue: engine dispatch, store/sharded dispatch+resolve, server tick,
+# tracer handles, cache probe/fill.
+DEFAULT_HOT_FUNCTIONS = (
+    ("LookupEngine", "lookup_async"),
+    ("*", "dispatch_*"),
+    ("*", "resolve_*"),
+    ("*Server", "tick"),
+    ("StageHandle", "begin"),
+    ("StageHandle", "end"),
+    ("HotKeyCache", "lookup"),
+    ("HotKeyCache", "fill"),
+)
+
+# calls whose result lives on device
+DEFAULT_DEVICE_PRODUCERS = (
+    "lookup_async", "device_view", "device_state", "_dist_dispatch",
+    "device_put",
+)
+
+# attribute names that hold device arrays in this codebase
+DEFAULT_DEVICE_ATTRS = (
+    "f_dev", "v_dev", "probe_split_acc", "_pos_dev", "_neg_dev",
+)
+
+# transfer sinks gated on taint (jnp.asarray is host->device, not here)
+_TAINT_SINKS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                "float", "int"}
+# sinks that block no matter what they're applied to
+_ALWAYS_SINKS = {"jax.device_get"}
+
+
+class HotSyncRule(Rule):
+    id = "HOTSYNC"
+    description = ("blocking device-to-host transfer inside a registered "
+                   "hot-path function")
+
+    def __init__(self, hot_functions=DEFAULT_HOT_FUNCTIONS,
+                 device_producers=DEFAULT_DEVICE_PRODUCERS,
+                 device_attrs=DEFAULT_DEVICE_ATTRS,
+                 sync_arg_ok=("resolve_*",)) -> None:
+        self.hot_functions = tuple(hot_functions)
+        self.device_producers = tuple(device_producers)
+        self.device_attrs = tuple(device_attrs)
+        # func_globs whose first non-self parameter is the designated
+        # sync payload (transfers of it are the point of the function)
+        self.sync_arg_ok = tuple(sync_arg_ok)
+
+    def check(self, sf: SourceFile) -> list:
+        from .core import walk_functions
+        import fnmatch
+        findings: list[Finding] = []
+        for qual, classname, fn in walk_functions(sf.tree):
+            if not match_hot(self.hot_functions, classname, fn.name):
+                continue
+            sync_param = None
+            if any(fnmatch.fnmatch(fn.name, g) for g in self.sync_arg_ok):
+                params = [a.arg for a in fn.args.args
+                          if a.arg not in ("self", "cls")]
+                if params:
+                    sync_param = params[0]
+            findings.extend(self._check_fn(sf, qual, fn, sync_param))
+        return findings
+
+    # ------------------------------------------------------------- taint
+
+    def _is_device_expr(self, node, tainted: set) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in self.device_attrs:
+                return True
+            return self._is_device_expr(node.value, tainted)
+        if isinstance(node, ast.Subscript):
+            return self._is_device_expr(node.value, tainted)
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            last = name.rsplit(".", 1)[-1]
+            if name.startswith(("jnp.", "jax.")):
+                return True
+            if last in self.device_producers:
+                return True
+            # method on a device value stays on device (e.g. x.sum())
+            if isinstance(node.func, ast.Attribute):
+                return self._is_device_expr(node.func.value, tainted)
+            return False
+        if isinstance(node, (ast.BinOp,)):
+            return (self._is_device_expr(node.left, tainted)
+                    or self._is_device_expr(node.right, tainted))
+        if isinstance(node, ast.UnaryOp):
+            return self._is_device_expr(node.operand, tainted)
+        if isinstance(node, ast.IfExp):
+            return (self._is_device_expr(node.body, tainted)
+                    or self._is_device_expr(node.orelse, tainted))
+        return False
+
+    def _from_sync_param(self, node, sync_param) -> bool:
+        """True when ``node`` is the sync parameter or an attribute /
+        subscript chain rooted at it (``pb``, ``pb.f_dev``, ``pb.x[:n]``)."""
+        if sync_param is None:
+            return False
+        while isinstance(node, (ast.Attribute, ast.Subscript)):
+            node = node.value
+        return isinstance(node, ast.Name) and node.id == sync_param
+
+    def _check_fn(self, sf, qual, fn, sync_param):
+        findings: list[Finding] = []
+        tainted: set = set()
+
+        def note(node, msg):
+            findings.append(Finding(self.id, sf.relpath, node.lineno,
+                                    node.col_offset, msg, symbol=qual))
+
+        def taint_target(tgt, is_dev):
+            if isinstance(tgt, ast.Name):
+                if is_dev:
+                    tainted.add(tgt.id)
+                else:
+                    tainted.discard(tgt.id)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                for el in tgt.elts:
+                    taint_target(el, is_dev)
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                is_dev = self._is_device_expr(node.value, tainted)
+                for tgt in node.targets:
+                    taint_target(tgt, is_dev)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                taint_target(node.target,
+                             self._is_device_expr(node.value, tainted))
+            elif isinstance(node, ast.Call):
+                name = dotted(node.func)
+                last = name.rsplit(".", 1)[-1] if name else ""
+                if name in _ALWAYS_SINKS:
+                    note(node, f"{name}() blocks until the device queue "
+                               f"drains; hot paths must stay async")
+                    continue
+                if last == "block_until_ready" or (
+                        isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "block_until_ready"):
+                    note(node, ".block_until_ready() on the hot path "
+                               "forces a device sync")
+                    continue
+                if last == "item" and isinstance(node.func, ast.Attribute) \
+                        and self._is_device_expr(node.func.value, tainted) \
+                        and not self._from_sync_param(node.func.value,
+                                                      sync_param):
+                    note(node, ".item() on a device value is a blocking "
+                               "transfer")
+                    continue
+                if name in _TAINT_SINKS and node.args:
+                    arg = node.args[0]
+                    if self._is_device_expr(arg, tainted) \
+                            and not self._from_sync_param(arg, sync_param):
+                        note(node, f"{name}() on a device value is a "
+                                   f"blocking device-to-host transfer")
+        return findings

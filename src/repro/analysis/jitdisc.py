@@ -1,0 +1,320 @@
+"""JITDISC — jit compilation discipline.
+
+PR 5's ``trace_count`` counter catches retraces at runtime; this rule
+catches the three patterns that cause them at review time:
+
+1. **jit-in-loop** — ``jax.jit(...)`` (or ``partial(jax.jit, ...)``)
+   called inside a ``for``/``while`` body builds a fresh compiled
+   callable (and cache entry) per iteration.
+2. **mutable-self capture** — a jit-wrapped lambda / local ``def`` whose
+   body reads ``self.<attr>``: the closure captures the *object*, so a
+   later attribute mutation silently changes semantics without a
+   retrace, or — if the attr feeds shapes — retraces every call.
+3. **tracer truthiness** — a plain ``if``/``while`` on a value that is a
+   tracer inside a traced function burns the branch into the compiled
+   graph (or raises ``TracerBoolConversionError``).  Static arguments
+   (``static_argnums``/``static_argnames``), parameters annotated with
+   Python scalar/str/tuple types, and anything derived from ``.shape`` /
+   ``.ndim`` / ``.dtype`` / ``len()`` / ``range()`` are exempt.
+
+Traced functions are: functions decorated with ``jax.jit`` /
+``partial(jax.jit, ...)``, local defs passed to ``jax.jit(name)``, plus
+configured ``extra_traced`` qualname globs for functions that are only
+ever called from inside a jitted wrapper (the engine's ``_lookup_impl``
+family).  ``jax.jit(<call>(...))`` is skipped — the callee isn't
+resolvable statically.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+
+from .core import Finding, Rule, SourceFile, dotted
+
+# functions jitted indirectly (called only under an outer jit) — the
+# truthiness check applies inside them too
+DEFAULT_EXTRA_TRACED = (
+    "LookupEngine._lookup_impl",
+    "LookupEngine._probe_file_baseline",
+    "LookupEngine._probe_file_model",
+    "LookupEngine._probe_level_via_model",
+    "LookupEngine._find_file",
+    "binsearch_rows",
+    "count_le_rows",
+    "bloom_probe_rows",
+)
+
+_STATIC_ANNOTATIONS = {"str", "int", "bool", "float", "tuple", "bytes"}
+_TAINT_KILLERS = {"shape", "ndim", "dtype", "size"}
+
+
+def _is_jit_expr(node) -> bool:
+    """True for ``jax.jit`` / ``jit`` names and ``partial(jax.jit, ...)``."""
+    name = dotted(node)
+    if name in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call) and dotted(node.func) in (
+            "partial", "functools.partial"):
+        return bool(node.args) and _is_jit_expr(node.args[0])
+    return False
+
+
+def _jit_call(node):
+    """If ``node`` is a Call invoking jax.jit (directly or via partial),
+    return it, else None."""
+    if isinstance(node, ast.Call) and _is_jit_expr(node.func):
+        return node
+    return None
+
+
+def _static_params(fn, jit_call) -> set:
+    """Parameter names made static by static_argnums/static_argnames on
+    the jit call/decorator, plus scalar-annotated and literal-default
+    parameters."""
+    static: set = set()
+    args = fn.args
+    posnames = [a.arg for a in args.posonlyargs + args.args]
+    if jit_call is not None:
+        for kw in jit_call.keywords:
+            if kw.arg == "static_argnames":
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.Constant) and isinstance(el.value,
+                                                                   str):
+                        static.add(el.value)
+            elif kw.arg == "static_argnums":
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.Constant) and isinstance(el.value,
+                                                                   int):
+                        if 0 <= el.value < len(posnames):
+                            static.add(posnames[el.value])
+    for a in args.posonlyargs + args.args + args.kwonlyargs:
+        ann = a.annotation
+        if ann is not None:
+            ann_name = dotted(ann)
+            if isinstance(ann, ast.Subscript):
+                ann_name = dotted(ann.value)
+            if ann_name.rsplit(".", 1)[-1].lower() in _STATIC_ANNOTATIONS:
+                static.add(a.arg)
+    defaults = args.defaults
+    for a, d in zip(args.args[len(args.args) - len(defaults):], defaults):
+        if isinstance(d, ast.Constant):
+            static.add(a.arg)
+    return static
+
+
+class JitDisciplineRule(Rule):
+    id = "JITDISC"
+    description = ("jax.jit callable defined in a loop, closing over "
+                   "mutable self state, or branching on a tracer")
+
+    def __init__(self, extra_traced=DEFAULT_EXTRA_TRACED) -> None:
+        self.extra_traced = tuple(extra_traced)
+
+    # ----------------------------------------------------------- checks
+
+    def check(self, sf: SourceFile) -> list:
+        findings: list[Finding] = []
+        findings.extend(self._check_jit_sites(sf))
+        findings.extend(self._check_truthiness(sf))
+        return findings
+
+    def _check_jit_sites(self, sf: SourceFile) -> list:
+        from .core import walk_functions
+        findings: list[Finding] = []
+        # map local function name -> def node, per module (for
+        # jax.jit(name) resolution)
+        local_defs: dict[str, ast.AST] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                local_defs[node.name] = node
+
+        # 1. jit calls inside loop bodies
+        for qual, _cls, fn in walk_functions(sf.tree):
+            for loop in ast.walk(fn):
+                if not isinstance(loop, (ast.For, ast.While)):
+                    continue
+                for sub in ast.walk(loop):
+                    call = _jit_call(sub)
+                    if call is not None:
+                        findings.append(Finding(
+                            self.id, sf.relpath, sub.lineno, sub.col_offset,
+                            "jax.jit called inside a loop body compiles a "
+                            "fresh callable every iteration; hoist it",
+                            symbol=qual))
+
+        # 2. jit-wrapped callables reading self.<attr>
+        for node in ast.walk(sf.tree):
+            call = _jit_call(node)
+            if call is None or not call.args:
+                continue
+            target = call.args[0]
+            body = None
+            if isinstance(target, ast.Lambda):
+                body = target
+            elif isinstance(target, ast.Name) and target.id in local_defs:
+                body = local_defs[target.id]
+            elif isinstance(target, ast.Call):
+                continue    # jax.jit(make_fn(...)) — not resolvable
+            if body is None:
+                continue
+            attrs = sorted({
+                d for sub in ast.walk(body)
+                if isinstance(sub, ast.Attribute)
+                and isinstance(sub.value, ast.Name)
+                and sub.value.id == "self"
+                for d in (sub.attr,)})
+            if attrs:
+                findings.append(Finding(
+                    self.id, sf.relpath, call.lineno, call.col_offset,
+                    f"jit-wrapped callable closes over mutable self state "
+                    f"({', '.join('self.' + a for a in attrs)}); pass it as "
+                    f"an argument or bind immutable locals",
+                ))
+        return findings
+
+    # ------------------------------------------------- tracer truthiness
+
+    def _traced_functions(self, sf: SourceFile):
+        """Yield (qualname, fn, jit_call_or_None) for every function whose
+        body executes under jax tracing."""
+        from .core import walk_functions
+        jitted_names: dict[str, ast.Call] = {}
+        for node in ast.walk(sf.tree):
+            call = _jit_call(node)
+            if call is not None and call.args \
+                    and isinstance(call.args[0], ast.Name):
+                jitted_names[call.args[0].id] = call
+        for qual, _cls, fn in walk_functions(sf.tree):
+            jit_call = None
+            traced = False
+            for dec in fn.decorator_list:
+                if _is_jit_expr(dec):
+                    traced = True
+                    if isinstance(dec, ast.Call):
+                        jit_call = dec
+                    break
+            if not traced and fn.name in jitted_names:
+                traced, jit_call = True, jitted_names[fn.name]
+            if not traced and any(fnmatch.fnmatch(qual, g) or
+                                  fnmatch.fnmatch(fn.name, g)
+                                  for g in self.extra_traced):
+                traced = True
+            if traced:
+                yield qual, fn, jit_call
+
+    def _check_truthiness(self, sf: SourceFile) -> list:
+        findings: list[Finding] = []
+        for qual, fn, jit_call in self._traced_functions(sf):
+            static = _static_params(fn, jit_call)
+            self._scan_body(sf, qual, fn, set(static), findings)
+        return findings
+
+    def _scan_body(self, sf, qual, fn, static, findings, seed_dynamic=()):
+        """Walk statements in order, tracking which names are static."""
+
+        def expr_static(node) -> bool:
+            if isinstance(node, ast.Constant):
+                return True
+            if isinstance(node, ast.Name):
+                return node.id in static or node.id not in assigned_dynamic
+            if isinstance(node, ast.Attribute):
+                if node.attr in _TAINT_KILLERS:
+                    return True
+                return expr_static(node.value)
+            if isinstance(node, ast.Subscript):
+                return expr_static(node.value)
+            if isinstance(node, ast.Call):
+                name = dotted(node.func)
+                last = name.rsplit(".", 1)[-1]
+                if last in ("len", "range", "isinstance", "hasattr", "zip",
+                            "enumerate", "tuple", "sorted"):
+                    return True
+                if name.startswith(("jnp.", "jax.", "lax.")):
+                    return False
+                # method on a static value (e.g. mode.startswith) is static
+                if isinstance(node.func, ast.Attribute):
+                    return expr_static(node.func.value)
+                return False
+            if isinstance(node, ast.Compare):
+                return expr_static(node.left) and all(
+                    expr_static(c) for c in node.comparators)
+            if isinstance(node, ast.BoolOp):
+                return all(expr_static(v) for v in node.values)
+            if isinstance(node, ast.UnaryOp):
+                return expr_static(node.operand)
+            if isinstance(node, ast.BinOp):
+                return expr_static(node.left) and expr_static(node.right)
+            if isinstance(node, (ast.Tuple, ast.List)):
+                return all(expr_static(e) for e in node.elts)
+            return False
+
+        # names assigned from dynamic (array-typed) expressions; every
+        # parameter not proven static starts dynamic — unannotated params
+        # of a jitted function are exactly the tracers
+        assigned_dynamic: set = set(seed_dynamic)
+        a = fn.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if p.arg not in static and p.arg not in ("self", "cls"):
+                assigned_dynamic.add(p.arg)
+
+        def mark_assign(tgt, is_static):
+            if isinstance(tgt, ast.Name):
+                if is_static:
+                    static.add(tgt.id)
+                    assigned_dynamic.discard(tgt.id)
+                else:
+                    static.discard(tgt.id)
+                    assigned_dynamic.add(tgt.id)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                for el in tgt.elts:
+                    mark_assign(el, is_static)
+
+        def visit(stmts):
+            for st in stmts:
+                if isinstance(st, ast.Assign):
+                    s = expr_static(st.value)
+                    for tgt in st.targets:
+                        mark_assign(tgt, s)
+                elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                    mark_assign(st.target, expr_static(st.value))
+                elif isinstance(st, ast.AugAssign):
+                    pass
+                elif isinstance(st, (ast.If, ast.While)):
+                    if not expr_static(st.test):
+                        findings.append(Finding(
+                            self.id, sf.relpath, st.lineno, st.col_offset,
+                            "python truthiness branch on a traced value "
+                            "inside a jitted function; use lax.cond/"
+                            "jnp.where or make the operand static",
+                            symbol=qual))
+                    visit(st.body)
+                    visit(st.orelse)
+                elif isinstance(st, ast.For):
+                    # range()/static iterables unroll fine; iterating a
+                    # tracer raises at trace time anyway
+                    mark_assign(st.target, True)
+                    visit(st.body)
+                    visit(st.orelse)
+                elif isinstance(st, (ast.With,)):
+                    visit(st.body)
+                elif isinstance(st, ast.Try):
+                    visit(st.body)
+                    for h in st.handlers:
+                        visit(h.body)
+                    visit(st.orelse)
+                    visit(st.finalbody)
+                elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    # nested defs trace under the same jit; they see the
+                    # outer static env plus their own annotations
+                    inner_static = set(static) | _static_params(st, None)
+                    self._scan_body_nested(sf, qual, st, inner_static,
+                                           assigned_dynamic, findings)
+
+        visit(fn.body)
+
+    def _scan_body_nested(self, sf, qual, fn, static, outer_dynamic,
+                          findings):
+        # reuse the same machinery with the combined closure environment
+        self._scan_body(sf, f"{qual}.{fn.name}", fn, set(static), findings,
+                        seed_dynamic=outer_dynamic)

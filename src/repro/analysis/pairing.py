@@ -1,0 +1,214 @@
+"""PAIRING — every dispatch has a resolve; every cache fill is epoch-stamped.
+
+PR 5 split the read path into ``dispatch_get`` (enqueue device work,
+return a pending handle) and ``resolve_get`` (the single blocking sync).
+A dispatched handle that is dropped on some control-flow path leaks the
+in-flight batch: the device work still runs, the value-log readers hold
+their segments, and the epoch-barrier logic in the pipelined server
+counts an in-flight entry that will never retire.  Separately, the
+epoch-invalidated ``HotKeyCache`` is only correct if every ``fill``
+carries the owning shard epochs — a fill without the stamp resurrects
+stale values after a write barrier.
+
+Checks:
+
+* every ``*.dispatch_get(...)`` call site must *consume* its result on
+  all control-flow paths before the function returns: pass it onward
+  (``resolve_get(pb)``, any call argument, a constructor), store it
+  (``self._inflight.append``, subscript/attribute store), or return it.
+  An ``if`` consumes only when both branches consume; merely *testing*
+  the handle (``pb.epochs != ...``) does not.  A bare
+  ``store.dispatch_get(...)`` expression statement is always a leak.
+* ``.fill(...)`` on a cache-like receiver (name contains ``cache``) must
+  pass ≥ 4 positional args or an ``epochs=`` keyword — the epoch stamp
+  is the 4th parameter of ``HotKeyCache.fill``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Finding, Rule, SourceFile, dotted, walk_functions
+
+
+def _names_in(node) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+class PairingRule(Rule):
+    id = "PAIRING"
+    description = ("dispatch_get result must reach resolve_get/escape on "
+                   "all paths; cache fills must carry epoch stamps")
+
+    def check(self, sf: SourceFile) -> list:
+        findings: list[Finding] = []
+        for qual, _cls, fn in walk_functions(sf.tree):
+            findings.extend(self._check_dispatch(sf, qual, fn))
+            findings.extend(self._check_fill(sf, qual, fn))
+        return findings
+
+    # ------------------------------------------------------ dispatch_get
+
+    def _check_dispatch(self, sf, qual, fn):
+        findings: list[Finding] = []
+        self._scan_stmts(sf, qual, fn.body, findings)
+        return findings
+
+    def _scan_stmts(self, sf, qual, stmts, findings, tail=()):
+        for i, st in enumerate(stmts):
+            rest = stmts[i + 1:] + list(tail)
+            self._check_stmt(sf, qual, st, rest, findings)
+            # recurse into nested blocks; code after the block is still a
+            # place the handle can be consumed, so thread it through
+            for blk in self._blocks(st):
+                self._scan_stmts(sf, qual, blk, findings, tail=rest)
+
+    @staticmethod
+    def _blocks(st):
+        blocks = []
+        for attr in ("body", "orelse", "finalbody"):
+            b = getattr(st, attr, None)
+            if isinstance(b, list) and b and isinstance(b[0], ast.stmt):
+                blocks.append(b)
+        for h in getattr(st, "handlers", ()):
+            blocks.append(h.body)
+        return blocks
+
+    def _dispatch_calls(self, node):
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) \
+                    and isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr == "dispatch_get":
+                yield sub
+
+    def _check_stmt(self, sf, qual, st, rest, findings):
+        # 1. discarded:  store.dispatch_get(...)  as a bare statement
+        if isinstance(st, ast.Expr):
+            for call in self._dispatch_calls(st.value):
+                if not self._nested_in_consumer(st.value, call):
+                    findings.append(Finding(
+                        self.id, sf.relpath, call.lineno, call.col_offset,
+                        "dispatch_get result discarded: the pending batch "
+                        "is never resolved", symbol=qual))
+            return
+        # 2. assigned:  pb = store.dispatch_get(...)
+        if isinstance(st, (ast.Assign, ast.AnnAssign)):
+            value = st.value
+            if value is None:
+                return
+            calls = list(self._dispatch_calls(value))
+            if not calls:
+                return
+            targets = st.targets if isinstance(st, ast.Assign) else [st.target]
+            names = set()
+            for t in targets:
+                names |= _names_in(t)
+            if not names:
+                return
+            if not self._consumed(names, rest):
+                call = calls[0]
+                findings.append(Finding(
+                    self.id, sf.relpath, call.lineno, call.col_offset,
+                    f"dispatch_get result "
+                    f"{'/'.join(sorted(names))} does not reach a "
+                    f"resolve_get/escape on every following path",
+                    symbol=qual))
+
+    @staticmethod
+    def _nested_in_consumer(root, call):
+        """dispatch_get directly nested in another call's arguments —
+        ``resolve_get(store.dispatch_get(...))`` — is consumed."""
+        for sub in ast.walk(root):
+            if isinstance(sub, ast.Call) and sub is not call:
+                for arg in list(sub.args) + [kw.value for kw in sub.keywords]:
+                    for inner in ast.walk(arg):
+                        if inner is call:
+                            return True
+        return False
+
+    # -------------------------------------- definite-consumption analysis
+
+    def _consumed(self, names: set, stmts) -> bool:
+        """True if every path through ``stmts`` consumes one of ``names``.
+
+        Consumption = the name used as a call argument / receiver of a
+        method call, returned, yielded, stored into a container/attr, or
+        re-assigned wholesale to something else (ownership moved).  A
+        reference inside an ``if`` *test* is not consumption."""
+        for i, st in enumerate(stmts):
+            rest = stmts[i + 1:]
+            if isinstance(st, (ast.Return, ast.Raise)):
+                return self._expr_consumes(getattr(st, "value", None) or
+                                           getattr(st, "exc", None), names)
+            if isinstance(st, ast.If):
+                then_ok = self._consumed(names, list(st.body) + rest)
+                else_ok = self._consumed(names, list(st.orelse) + rest)
+                return then_ok and else_ok
+            if isinstance(st, ast.Try):
+                # the happy path must consume; handlers are error paths
+                return self._consumed(names, list(st.body)
+                                      + list(st.orelse) + rest)
+            if isinstance(st, ast.With):
+                return self._consumed(names, list(st.body) + rest)
+            if isinstance(st, (ast.For, ast.While)):
+                # loops may run zero times: only the code after the loop
+                # (or an unconditional consume inside we can't prove)
+                continue
+            if isinstance(st, ast.Expr):
+                if self._expr_consumes(st.value, names):
+                    return True
+            elif isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                if st.value is not None \
+                        and self._expr_consumes(st.value, names):
+                    return True
+                # wholesale re-assignment of the name drops the old
+                # handle — that's a *new* handle, old one leaked; keep
+                # scanning (conservative: not consumption)
+        return False
+
+    def _expr_consumes(self, node, names: set) -> bool:
+        if node is None:
+            return False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                # receiver:  pb.resolve()  /  name in any arg position
+                recv = sub.func
+                if isinstance(recv, ast.Attribute):
+                    for inner in ast.walk(recv.value):
+                        if isinstance(inner, ast.Name) and inner.id in names:
+                            return True
+                for arg in list(sub.args) + [kw.value for kw in sub.keywords]:
+                    for inner in ast.walk(arg):
+                        if isinstance(inner, ast.Name) and inner.id in names:
+                            return True
+            elif isinstance(sub, (ast.Tuple, ast.List, ast.Dict)):
+                for inner in ast.walk(sub):
+                    if isinstance(inner, ast.Name) and inner.id in names:
+                        return True
+            elif isinstance(sub, ast.Name) and sub.id in names \
+                    and isinstance(node, (ast.Name, ast.Attribute,
+                                          ast.Await)):
+                # bare `return pb` / `return pb.x`
+                return True
+        return False
+
+    # ------------------------------------------------------------- fills
+
+    def _check_fill(self, sf, qual, fn):
+        findings: list[Finding] = []
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "fill"):
+                continue
+            recv = dotted(node.func.value).lower()
+            if "cache" not in recv:
+                continue
+            has_epoch_kw = any(kw.arg == "epochs" for kw in node.keywords)
+            if len(node.args) < 4 and not has_epoch_kw:
+                findings.append(Finding(
+                    self.id, sf.relpath, node.lineno, node.col_offset,
+                    "cache fill without an epoch stamp: stale values can "
+                    "survive a write barrier (pass epochs as the 4th arg)",
+                    symbol=qual))
+        return findings

@@ -272,8 +272,6 @@ class StorageEngine:
         epoch = int(model.epoch)
         write_level_model(lmodel_path(self.dir, level, epoch), model,
                           self.fsync)
-        if self.fsync:
-            fsync_dir(self.dir)   # sidecar entry durable before the edit
         old = self.state.level_models.get(level)
         edit = {"lmodel": {str(level): epoch}}
         self.manifest.append(edit)

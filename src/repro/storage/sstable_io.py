@@ -117,6 +117,10 @@ def write_level_model(path: str, model: PLRModel, fsync: bool = False) -> None:
         if fsync:
             os.fsync(f.fileno())
     os.replace(tmp, path)
+    if fsync:
+        # the rename itself must be durable before the MANIFEST edit that
+        # references this sidecar can be written
+        fsync_dir(os.path.dirname(path) or ".")
 
 
 def load_level_model(path: str, verify: bool = True) -> PLRModel | None:

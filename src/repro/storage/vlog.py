@@ -214,9 +214,15 @@ class DurableValueLog(ValueLog):
         used = head - head_seg * seg_slots
         if used:
             path = vlog_path(dirpath, head_seg)
-            have = os.path.getsize(path) if os.path.exists(path) else 0
+            created = not os.path.exists(path)
+            have = 0 if created else os.path.getsize(path)
             want = used * vlog.entry_size
             if have < want:
                 with open(path, "ab") as f:
                     f.write(b"\x00" * (want - have))
+                    f.flush()
+                    if fsync:
+                        os.fsync(f.fileno())
+                if fsync and created:
+                    fsync_dir(dirpath)
         return vlog
