@@ -31,6 +31,29 @@ on a 2-core container XLA steals the spare core whenever the sync arm
 blocks, compressing the ratio; the emitted ``cores=`` field says what
 the number was measured on.
 
+The A2 fleet also runs a **threaded** arm: the same pipelined server
+with a host I/O pool (``io_workers=IO_WORKERS``), which hands each
+batch's blocking half — the device sync, overlay merge, and value-log
+fetch — to a worker so it overlaps the next batch's admission and
+dispatch.  ``serve/pipelined_io.c*`` reports its throughput plus the
+measured overlap ratio (hidden / (hidden + exposed) resolve time); the
+``serve/pipeline.io_speedup.c*`` lines carry the acceptance metric
+(threaded >= the PR 5 pipelined baseline at 64/256 clients), with
+``epoch_violations == 0`` still asserted on the threaded arm.
+
+Part A4 — group-commit WAL: durable-write arms on ``fsync=True`` stores.
+Async closed-loop clients drive a write-heavy (100% PUT) and a mixed
+YCSB-A-shaped (~50/50 GET/PUT) stream through the pipelined server
+twice: once with the per-append writer (every WAL append fsyncs) and
+once with the group-commit queue (appends enqueue; the tick's single
+``wal_sync`` barrier makes one committer flush+fsync cover every batch
+applied that tick).  Reported per arm: throughput, p50/p99 request
+latency in ticks, fsyncs per request, and the coalesce factor
+(appends/commits); the ``serve/wal.fsync_reduction.*`` lines carry the
+acceptance metric (>= 4x fewer fsyncs per op with group commit on the
+write-heavy arm).  Durability is identical across arms — both fsync
+everything acknowledged before the tick completes its requests.
+
 Part B — fleet maintenance: an update-heavy stream (sustained
 overwrites) drives value-log GC on every shard.  Uncoordinated, each
 shard's MaintenanceScheduler fires from its own write ticks and the
@@ -84,6 +107,17 @@ PIPE_ROUNDS = 8 if SMOKE else 36
 PIPE_WARM = 2 if SMOKE else 4         # untimed leading rounds per client
 MAX_INFLIGHT = 8
 PIPE_CARRY = 1
+IO_WORKERS = 2                        # threaded arm: host I/O pool size
+# part A4 (group-commit WAL): durable-write arms on fsync=True stores.
+# keys_per_req == max_batch_keys so every PUT request is its own batch
+# (its own WAL append per touched shard) — the per-append writer then
+# fsyncs once per batch per shard while the group-commit queue covers
+# every batch the tick applied with one committer fsync per shard.
+GC_CLIENTS = 16
+GC_ROUNDS = 6 if SMOKE else 16
+GC_KEYS_PER_REQ = 128
+GC_SHARDS = 4
+GC_BATCHES_PER_TICK = 16
 # part A3 (obs tracing overhead): interleaved obs-on/obs-off arms at the
 # acceptance client count; best-of-N per arm absorbs scheduler noise
 OBS_CLIENTS = 64
@@ -92,20 +126,23 @@ OBS_ROUNDS = 16 if SMOKE else 36      # longer than PIPE_ROUNDS in smoke:
 OBS_SAMPLE_EVERY = 4                  # the 5% gate needs a stable ratio
 
 
-def _store_cfg() -> StoreConfig:
+def _store_cfg(**kw) -> StoreConfig:
+    """Shared store geometry; ``kw`` overrides (the A4 durability arms
+    pass ``fsync=True`` and toggle ``wal_group_commit``)."""
     return StoreConfig(granularity="level", policy="always",
                        value_size=VALUE_SIZE, vlog_seg_slots=1 << 9,
                        lsm=LSMConfig(memtable_cap=1 << 11, file_cap=1 << 12,
                                      l1_cap_records=1 << 14),
-                       engine=EngineConfig(seg_cap=4096))
+                       engine=EngineConfig(seg_cap=4096), **kw)
 
 
-def _open_store(path: str, keys: np.ndarray, n_shards: int) -> ShardedStore:
+def _open_store(path: str, keys: np.ndarray, n_shards: int,
+                **kw) -> ShardedStore:
     bounds = tuple(int(b) for b in
                    np.quantile(keys, np.arange(1, n_shards) / n_shards))
     st = ShardedStore.open(path, ShardedConfig(n_shards=n_shards,
                                                boundaries=bounds),
-                           _store_cfg())
+                           _store_cfg(**kw))
     return st
 
 
@@ -210,7 +247,8 @@ def _closed_loop_async(srv, streams, clients: int, rounds: int,
     are untimed (XLA compiles, cache warm-up) so both arms are measured
     in steady state.  Latency is in server ticks (completed - submitted),
     the schedule-independent cost a request pays for batching and
-    pipelining."""
+    pipelining.  Stream items are GET key arrays, or ``(op, keys)``
+    tuples for the mixed/write arms."""
     nxt = [0] * clients
     pending: list[list[ServerRequest]] = [[] for _ in range(clients)]
     lat_ticks: list[int] = []
@@ -224,7 +262,9 @@ def _closed_loop_async(srv, streams, clients: int, rounds: int,
             t_start = time.perf_counter()
         for c in range(clients):
             while len(pending[c]) < depth and nxt[c] < rounds:
-                r = ServerRequest(rid, "get", streams[c][nxt[c]])
+                item = streams[c][nxt[c]]
+                op, ks = item if isinstance(item, tuple) else ("get", item)
+                r = ServerRequest(rid, op, ks)
                 if not srv.submit(r):   # backpressure: retry next tick
                     break
                 rid += 1
@@ -244,10 +284,11 @@ def _closed_loop_async(srv, streams, clients: int, rounds: int,
 
 
 def _run_pipeline_arm(st: ShardedStore, keys: np.ndarray,
-                      clients: int) -> tuple[float, float]:
+                      clients: int) -> tuple[float, float, float]:
     """Part A2: identical async clients and batch geometry against the
-    synchronous tick loop and the pipelined server; returns
-    (sync_rps, pipelined_rps)."""
+    synchronous tick loop, the pipelined server, and the pipelined
+    server with the host I/O pool attached; returns
+    (sync_rps, pipelined_rps, threaded_rps)."""
     streams = _request_streams(keys, seed=20 + clients, clients=clients,
                                rounds=PIPE_ROUNDS,
                                keys_per_req=PIPE_KEYS_PER_REQ)
@@ -276,14 +317,43 @@ def _run_pipeline_arm(st: ShardedStore, keys: np.ndarray,
          f"batches={s['batches']} max_depth={p['max_depth_seen']} "
          f"bubbles={p['bubbles']} "
          f"epoch_violations={p['epoch_violations']}")
-    return sync_rps, pipe_rps
+    # threaded arm: same pipelined server, host I/O pool attached — each
+    # in-flight batch's resolve runs on a worker while the tick loop
+    # admits and dispatches the next one
+    vf0 = st.stats()["value_fetch"]
+    srv = PipelinedServer(st, PipelineConfig(
+        max_batch_keys=1024, max_wait_ticks=0, queue_capacity=qcap,
+        max_batches_per_tick=8, max_inflight=MAX_INFLIGHT,
+        carry=PIPE_CARRY, coordinate_maintenance=True,
+        io_workers=IO_WORKERS,
+        coordinator=CoordinatorConfig(budget_us_per_tick=BUDGET_US)))
+    try:
+        io_rps, p50, p99, s = _closed_loop_async(srv, streams, clients,
+                                                 PIPE_ROUNDS)
+    finally:
+        srv.shutdown()
+    p = s["pipeline"]
+    vf1 = st.stats()["value_fetch"]
+    hid = vf1["hidden_us"] - vf0["hidden_us"]
+    exp = vf1["exposed_us"] - vf0["exposed_us"]
+    overlap = hid / max(hid + exp, 1e-9)
+    emit(f"serve/pipelined_io.c{clients}", 1e6 / io_rps,
+         f"reqs_per_s={io_rps:.0f} p50_ticks={p50:.0f} "
+         f"p99_ticks={p99:.0f} cache_hit={s['cache']['hit_rate']:.2f} "
+         f"batches={s['batches']} io_workers={IO_WORKERS} "
+         f"io_tasks={s['io']['submitted']} overlap={overlap:.2f} "
+         f"epoch_violations={p['epoch_violations']}")
+    assert p["epoch_violations"] == 0, "threaded arm broke epoch pinning"
+    return sync_rps, pipe_rps, io_rps
 
 
 def _run_obs_arm(st: ShardedStore, keys: np.ndarray, enabled: bool,
                  seed: int):
     """One pipelined serving run with tracing on or off; returns
     (reqs/s, server) — the server is kept alive so the obs-on arm's
-    snapshot/timeline can be exported after the measurement."""
+    snapshot/timeline can be exported after the measurement.  Both arms
+    run the *threaded* server (``io_workers=IO_WORKERS``) so the 5%
+    overhead gate covers tracing on the I/O-pool path too."""
     streams = _request_streams(keys, seed=seed, clients=OBS_CLIENTS,
                                rounds=OBS_ROUNDS,
                                keys_per_req=PIPE_KEYS_PER_REQ)
@@ -292,10 +362,14 @@ def _run_obs_arm(st: ShardedStore, keys: np.ndarray, enabled: bool,
         queue_capacity=2 * PIPE_DEPTH * OBS_CLIENTS,
         max_batches_per_tick=8, max_inflight=MAX_INFLIGHT,
         carry=PIPE_CARRY, coordinate_maintenance=True,
+        io_workers=IO_WORKERS,
         coordinator=CoordinatorConfig(budget_us_per_tick=BUDGET_US),
         obs=ObsConfig(enabled=enabled, sample_every=OBS_SAMPLE_EVERY)))
-    rps, _, _, _ = _closed_loop_async(srv, streams, OBS_CLIENTS,
-                                      OBS_ROUNDS)
+    try:
+        rps, _, _, _ = _closed_loop_async(srv, streams, OBS_CLIENTS,
+                                          OBS_ROUNDS)
+    finally:
+        srv.shutdown()      # closes the pool; snapshot/timeline survive
     return rps, srv
 
 
@@ -354,6 +428,72 @@ def _obs_part() -> None:
 def run_obs_only() -> None:
     """Entry point of the ``serve_obs`` suite (the CI overhead gate)."""
     _obs_part()
+
+
+def _mixed_streams(keys: np.ndarray, seed: int, clients: int, rounds: int,
+                   keys_per_req: int, put_frac: float) -> list[list]:
+    """Per-client ``(op, keys)`` request streams: YCSB-A-shaped at
+    ``put_frac=0.5``, pure write pressure at ``1.0``.  PUT keys are drawn
+    from the loaded keyspace (overwrites — steady WAL pressure with no
+    store growth)."""
+    rng = np.random.default_rng(seed)
+    streams = []
+    for _ in range(clients):
+        reqs = []
+        for _ in range(rounds):
+            op = "put" if rng.random() < put_frac else "get"
+            reqs.append((op,
+                         rng.choice(keys, keys_per_req).astype(np.int64)))
+        streams.append(reqs)
+    return streams
+
+
+def _run_wal_arm(kind: str, keys: np.ndarray, group_commit: bool,
+                 put_frac: float) -> dict:
+    """One part-A4 durability arm: a fresh ``fsync=True`` store (the WAL
+    writer is the variable under test), pipelined server, async
+    closed-loop clients; WAL counters are measured as deltas so the load
+    phase doesn't pollute them."""
+    wal_kind = "group" if group_commit else "per_append"
+    d = tempfile.mkdtemp(prefix=f"bourbon_serve_wal_{wal_kind}_")
+    try:
+        st = _open_store(os.path.join(d, "db"), keys, n_shards=GC_SHARDS,
+                         fsync=True, wal_group_commit=group_commit)
+        _load(st, keys)
+        streams = _mixed_streams(keys, seed=60, clients=GC_CLIENTS,
+                                 rounds=GC_ROUNDS,
+                                 keys_per_req=GC_KEYS_PER_REQ,
+                                 put_frac=put_frac)
+        srv = PipelinedServer(st, PipelineConfig(
+            max_batch_keys=GC_KEYS_PER_REQ, max_wait_ticks=0,
+            queue_capacity=2 * PIPE_DEPTH * GC_CLIENTS,
+            max_batches_per_tick=GC_BATCHES_PER_TICK,
+            max_inflight=MAX_INFLIGHT, carry=PIPE_CARRY,
+            coordinate_maintenance=True,
+            coordinator=CoordinatorConfig(budget_us_per_tick=BUDGET_US)))
+        w0 = st.stats()["wal"]
+        rps, p50, p99, s = _closed_loop_async(srv, streams, GC_CLIENTS,
+                                              GC_ROUNDS)
+        w1 = st.stats()["wal"]
+        ops = GC_CLIENTS * GC_ROUNDS
+        appends = w1["appends"] - w0["appends"]
+        fsyncs = w1["fsyncs"] - w0["fsyncs"]
+        commits = w1["commits"] - w0["commits"]
+        fsyncs_per_op = fsyncs / ops
+        coalesce = appends / max(commits, 1)
+        p = s["pipeline"]
+        emit(f"serve/wal_{kind}.{wal_kind}", 1e6 / rps,
+             f"reqs_per_s={rps:.0f} p50_ticks={p50:.0f} "
+             f"p99_ticks={p99:.0f} fsyncs_per_op={fsyncs_per_op:.2f} "
+             f"appends={appends} fsyncs={fsyncs} commits={commits} "
+             f"coalesce={coalesce:.1f} put_frac={put_frac} "
+             f"epoch_violations={p['epoch_violations']}")
+        st.close()
+        return {"rps": rps, "p50_ticks": p50, "p99_ticks": p99,
+                "appends": appends, "fsyncs": fsyncs, "commits": commits,
+                "fsyncs_per_op": fsyncs_per_op, "coalesce": coalesce}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
 
 
 def _overwrite_stream(keys: np.ndarray, seed: int) -> list[np.ndarray]:
@@ -447,18 +587,41 @@ def run() -> None:
                                     replace=False), with_values=True)
             pad *= 2
         for clients in PIPE_CLIENTS:
-            sync_rps, pipe_rps = _run_pipeline_arm(st, keys, clients)
+            sync_rps, pipe_rps, io_rps = _run_pipeline_arm(st, keys,
+                                                           clients)
             emit(f"serve/pipeline.speedup.c{clients}", 0.0,
                  f"pipelined_over_sync={pipe_rps / sync_rps:.2f}x "
                  f"max_inflight={MAX_INFLIGHT} carry={PIPE_CARRY} "
                  f"depth={PIPE_DEPTH} cores={os.cpu_count()} "
                  f"meets_1_5x={pipe_rps / sync_rps >= 1.5}")
+            emit(f"serve/pipeline.io_speedup.c{clients}", 0.0,
+                 f"threaded_over_pipelined={io_rps / pipe_rps:.2f}x "
+                 f"io_workers={IO_WORKERS} cores={os.cpu_count()} "
+                 f"beats_baseline={io_rps >= pipe_rps}")
         st.close()
     finally:
         shutil.rmtree(d, ignore_errors=True)
 
     # part A3: obs tracing overhead (per-stage breakdown + 5% gate)
     _obs_part()
+
+    # part A4: group-commit WAL durable-write arms (fsync=True stores)
+    wal_extra = {}
+    for kind, put_frac in (("write", 1.0), ("mixed", 0.5)):
+        res = {arm: _run_wal_arm(kind, keys, gc_on, put_frac)
+               for arm, gc_on in (("per_append", False), ("group", True))}
+        red = (res["per_append"]["fsyncs_per_op"]
+               / max(res["group"]["fsyncs_per_op"], 1e-9))
+        emit(f"serve/wal.fsync_reduction.{kind}", 0.0,
+             f"per_append_fsyncs_per_op="
+             f"{res['per_append']['fsyncs_per_op']:.2f} "
+             f"group_fsyncs_per_op={res['group']['fsyncs_per_op']:.2f} "
+             f"reduction={red:.1f}x "
+             f"coalesce={res['group']['coalesce']:.1f} "
+             f"meets_4x={red >= 4.0}")
+        wal_extra[kind] = {"reduction": red, **{
+            arm: res[arm] for arm in res}}
+    common.set_artifact_extra("wal_group_commit", wal_extra)
 
     # part B: fleet-stall time with vs without the coordinator
     wkeys = keys[: N_KEYS // 2]

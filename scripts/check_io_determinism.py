@@ -1,0 +1,161 @@
+#!/usr/bin/env python
+"""CI gate: the host I/O pool must not change a single result bit.
+
+The threaded serving path (``io_workers > 0``) moves each batch's
+resolve — device sync, overlay merge, value-log fetch — onto pool
+workers, and the group-commit WAL moves fsyncs onto a committer thread.
+Both are *performance* planes: worker count, scheduling, and completion
+order must be invisible in every answer the server gives.  This script
+runs one fixed mixed workload through the pipelined server with
+``io_workers`` 0 (inline — the seed's serial semantics), 1, and 4 on
+identical fresh stores (group-commit WAL on, so the committer thread is
+exercised too) and fails unless all three produce byte-identical
+found/value arrays per request, identical epoch vectors, and
+``epoch_violations == 0``.
+
+Exit status 0 = identical; 1 = any divergence (printed per request).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import LSMConfig, StoreConfig  # noqa: E402
+from repro.core.engine import EngineConfig  # noqa: E402
+from repro.distributed import ShardedConfig, ShardedStore  # noqa: E402
+from repro.server import (PipelineConfig, PipelinedServer,  # noqa: E402
+                          ServerRequest)
+
+N_KEYS = 1 << 12
+N_SHARDS = 4
+CLIENTS = 8
+ROUNDS = 6
+KEYS_PER_REQ = 64
+POOL_SIZES = (0, 1, 4)
+
+
+def _open_store(path: str, keys: np.ndarray) -> ShardedStore:
+    bounds = tuple(int(b) for b in
+                   np.quantile(keys, np.arange(1, N_SHARDS) / N_SHARDS))
+    cfg = StoreConfig(granularity="level", policy="always", value_size=16,
+                      vlog_seg_slots=1 << 9, wal_group_commit=True,
+                      lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                                    l1_cap_records=1 << 13),
+                      engine=EngineConfig(seg_cap=4096))
+    st = ShardedStore.open(path, ShardedConfig(n_shards=N_SHARDS,
+                                               boundaries=bounds), cfg)
+    for off in range(0, keys.shape[0], 1 << 11):
+        st.put_batch(keys[off: off + (1 << 11)])
+    st.flush_all()
+    st.learn_all()
+    return st
+
+
+def _streams(keys: np.ndarray) -> list[list[tuple[str, np.ndarray]]]:
+    """Fixed per-client (op, keys) streams: mostly GETs (some keys
+    absent), a few PUT barriers so write drains interleave with the
+    threaded resolves."""
+    rng = np.random.default_rng(7)
+    universe = np.concatenate([keys, keys + 1])   # +1 keys mostly miss
+    streams = []
+    for c in range(CLIENTS):
+        reqs = []
+        for r in range(ROUNDS):
+            if c == 0 and r % 3 == 2:
+                reqs.append(("put",
+                             rng.choice(keys, KEYS_PER_REQ)
+                             .astype(np.int64)))
+            else:
+                reqs.append(("get",
+                             rng.choice(universe, KEYS_PER_REQ)
+                             .astype(np.int64)))
+        streams.append(reqs)
+    return streams
+
+
+def _run(io_workers: int, keys: np.ndarray, streams) -> tuple[list, int]:
+    d = tempfile.mkdtemp(prefix=f"bourbon_iodet_w{io_workers}_")
+    try:
+        st = _open_store(os.path.join(d, "db"), keys)
+        srv = PipelinedServer(st, PipelineConfig(
+            max_batch_keys=256, max_wait_ticks=0, queue_capacity=64,
+            max_batches_per_tick=4, max_inflight=4, carry=1,
+            io_workers=io_workers))
+        reqs = []
+        rid = 0
+        nxt = [0] * CLIENTS
+        pend: list[ServerRequest | None] = [None] * CLIENTS
+        served = 0
+        total = CLIENTS * ROUNDS
+        try:
+            while served < total:
+                for c in range(CLIENTS):
+                    if pend[c] is not None or nxt[c] >= ROUNDS:
+                        continue
+                    op, ks = streams[c][nxt[c]]
+                    r = ServerRequest(rid, op, ks)
+                    if srv.submit(r):
+                        rid += 1
+                        pend[c] = r
+                        nxt[c] += 1
+                        reqs.append(r)
+                srv.tick()
+                for c in range(CLIENTS):
+                    if pend[c] is not None and pend[c].done:
+                        pend[c] = None
+                        served += 1
+            violations = srv.stats()["pipeline"]["epoch_violations"]
+        finally:
+            srv.shutdown()
+            st.close()
+        out = []
+        for r in reqs:
+            if r.op == "get":
+                out.append((r.rid,
+                            np.asarray(r.found).tobytes(),
+                            np.asarray(r.result).tobytes(),
+                            tuple(r.epochs_served or ())))
+            else:
+                out.append((r.rid, b"put", b"", ()))
+        return out, violations
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def main() -> int:
+    rng = np.random.default_rng(3)
+    keys = rng.permutation(np.arange(1, N_KEYS + 1, dtype=np.int64) * 5)
+    streams = _streams(keys)
+    results = {}
+    for w in POOL_SIZES:
+        results[w], violations = _run(w, keys, streams)
+        if violations != 0:
+            print(f"FAIL: io_workers={w} epoch_violations={violations}")
+            return 1
+        print(f"io_workers={w}: {len(results[w])} requests served, "
+              f"epoch_violations=0")
+    ref = results[POOL_SIZES[0]]
+    ok = True
+    for w in POOL_SIZES[1:]:
+        for (rid, f0, v0, e0), (rid2, f1, v1, e1) in zip(ref, results[w]):
+            if (rid, f0, v0, e0) != (rid2, f1, v1, e1):
+                print(f"FAIL: io_workers={w} diverges from inline at "
+                      f"request {rid}")
+                ok = False
+                break
+    if not ok:
+        return 1
+    print(f"OK: io_workers {POOL_SIZES} byte-identical across "
+          f"{len(ref)} requests")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -56,7 +56,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run serve
 
-# observability overhead gate: serve bench with tracing enabled must stay
+# host I/O plane determinism gate: the threaded read path (io_workers 1
+# and 4) and the group-commit WAL committer must produce byte-identical
+# results to the inline path (io_workers=0) with epoch_violations == 0 —
+# worker count and thread scheduling are performance knobs, never
+# semantics
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/check_io_determinism.py
+
+# observability overhead gate: serve bench with tracing enabled (on the
+# threaded pipelined server — the I/O-pool path is traced too) must stay
 # within 5% of the untraced arm (and every read-path stage must have
 # sampled observations).  A shared-CPU container makes single runs noisy,
 # so the cheap obs-only suite retries up to 3 times before failing.

@@ -41,6 +41,14 @@ DEFAULT_HOT_FUNCTIONS = (
     ("StageHandle", "end"),
     ("HotKeyCache", "lookup"),
     ("HotKeyCache", "fill"),
+    # host I/O plane (repro.io + group-commit WAL): these run on, or are
+    # waited on by, the tick loop — a blocking device transfer inside any
+    # of them would serialize the exact overlap they exist to create
+    ("IOPool", "submit"),
+    ("GroupCommitWAL", "append"),
+    ("GroupCommitWAL", "sync"),
+    ("ValueFetch", "wait"),
+    ("*", "wal_sync"),
 )
 
 # calls whose result lives on device

@@ -12,13 +12,21 @@ stale values after a write barrier.
 
 Checks:
 
-* every ``*.dispatch_get(...)`` call site must *consume* its result on
-  all control-flow paths before the function returns: pass it onward
-  (``resolve_get(pb)``, any call argument, a constructor), store it
-  (``self._inflight.append``, subscript/attribute store), or return it.
-  An ``if`` consumes only when both branches consume; merely *testing*
-  the handle (``pb.epochs != ...``) does not.  A bare
-  ``store.dispatch_get(...)`` expression statement is always a leak.
+* every handle-returning call site must *consume* its result on all
+  control-flow paths before the function returns: pass it onward
+  (``resolve_get(pb)``, ``wait_all(futs)``, any call argument, a
+  constructor), store it (``self._inflight.append``, subscript/attribute
+  store), or return it.  An ``if`` consumes only when both branches
+  consume; merely *testing* the handle (``pb.epochs != ...``) does not.
+  A bare handle-returning expression statement is always a leak.  The
+  tracked producers are ``*.dispatch_get(...)`` (pending device batch),
+  ``*.resolve_get_async(...)`` (in-flight :class:`ValueFetch` — dropping
+  it silently skips the value materialization), and ``<pool-ish
+  receiver>.submit(...)`` (an :class:`~repro.io.IOFuture` that parks its
+  task's exception until ``result()`` — dropped, the failure vanishes).
+  ``submit`` is only tracked when the receiver name contains ``pool`` or
+  ``io``, so the request queue's and engine's unrelated ``submit``
+  methods stay out of scope.
 * ``.fill(...)`` on a cache-like receiver (name contains ``cache``) must
   pass ≥ 4 positional args or an ``epochs=`` keyword — the epoch stamp
   is the 4th parameter of ``HotKeyCache.fill``.
@@ -76,10 +84,18 @@ class PairingRule(Rule):
 
     def _dispatch_calls(self, node):
         for sub in ast.walk(node):
-            if isinstance(sub, ast.Call) \
-                    and isinstance(sub.func, ast.Attribute) \
-                    and sub.func.attr == "dispatch_get":
+            if not (isinstance(sub, ast.Call)
+                    and isinstance(sub.func, ast.Attribute)):
+                continue
+            attr = sub.func.attr
+            if attr in ("dispatch_get", "resolve_get_async"):
                 yield sub
+            elif attr == "submit":
+                # only I/O-pool submits return trackable futures; the
+                # request queue's / engine's submit methods do not
+                recv = dotted(sub.func.value).lower()
+                if "pool" in recv or "io" in recv:
+                    yield sub
 
     def _check_stmt(self, sf, qual, st, rest, findings):
         # 1. discarded:  store.dispatch_get(...)  as a bare statement
@@ -88,8 +104,8 @@ class PairingRule(Rule):
                 if not self._nested_in_consumer(st.value, call):
                     findings.append(Finding(
                         self.id, sf.relpath, call.lineno, call.col_offset,
-                        "dispatch_get result discarded: the pending batch "
-                        "is never resolved", symbol=qual))
+                        f"{call.func.attr} result discarded: the pending "
+                        f"handle is never resolved/joined", symbol=qual))
             return
         # 2. assigned:  pb = store.dispatch_get(...)
         if isinstance(st, (ast.Assign, ast.AnnAssign)):
@@ -100,6 +116,9 @@ class PairingRule(Rule):
             if not calls:
                 return
             targets = st.targets if isinstance(st, ast.Assign) else [st.target]
+            if any(isinstance(t, (ast.Attribute, ast.Subscript))
+                   for t in targets):
+                return   # stored into an object/container: escaped
             names = set()
             for t in targets:
                 names |= _names_in(t)
@@ -109,9 +128,9 @@ class PairingRule(Rule):
                 call = calls[0]
                 findings.append(Finding(
                     self.id, sf.relpath, call.lineno, call.col_offset,
-                    f"dispatch_get result "
+                    f"{call.func.attr} result "
                     f"{'/'.join(sorted(names))} does not reach a "
-                    f"resolve_get/escape on every following path",
+                    f"resolve/join/escape on every following path",
                     symbol=qual))
 
     @staticmethod

@@ -37,6 +37,10 @@ __all__ = ["StoreConfig", "BourbonStore", "PendingBatch"]
 
 _PAD_PROBE = -(1 << 62)
 
+# below this batch size a pooled value fetch costs more in hand-off than
+# the arena read itself; resolve stays inline
+_IO_FETCH_CHUNK = 4096
+
 
 def _next_pow2(x: int) -> int:
     return 1 << max(0, (x - 1).bit_length())
@@ -59,6 +63,11 @@ class StoreConfig:
     storage_dir: str | None = None
     vlog_seg_slots: int = 1 << 12     # value-log entries per segment file
     fsync: bool = False               # fsync every append (power-loss safe)
+    # group-commit WAL (repro.storage.wal.GroupCommitWAL): put_batch
+    # acknowledges once the frame is queued and ordered; durability is at
+    # the next wal_sync() — many batches coalesce into one fsync.  False
+    # keeps the per-append writer (durable before put_batch returns)
+    wal_group_commit: bool = False
 
     def __post_init__(self):
         self.engine.plr_delta = self.lsm.plr_delta
@@ -131,6 +140,9 @@ class BourbonStore:
         self._obs_labels: dict = {}
         self._obs_events = None
         self._vf = NULL_HANDLE           # value-fetch stage handle
+        # host I/O plane (repro.io): attach_io wires a worker pool so
+        # large value fetches chunk across threads; None = inline fetch
+        self._io = None
         self.auto_gc_stats = {"runs": 0, "segments_removed": 0,
                               "bytes_reclaimed": 0, "entries_moved": 0}
         if cfg.storage_dir is not None:
@@ -156,7 +168,9 @@ class BourbonStore:
     def _attach_storage(self, path: str) -> None:
         # imported lazily: repro.storage depends on repro.core submodules
         from repro.storage import DurableValueLog, StorageEngine, load_tables
-        self._storage = StorageEngine(path, fsync=self.cfg.fsync)
+        self._storage = StorageEngine(
+            path, fsync=self.cfg.fsync,
+            group_commit=self.cfg.wal_group_commit)
         try:
             # validate (or record, on a fresh dir) the store geometry
             # before any segment file is parsed with a possibly-wrong
@@ -257,6 +271,45 @@ class BourbonStore:
         if self._closed:
             raise RuntimeError("store is closed — writes would be silently "
                                "non-durable; reopen with BourbonStore.open()")
+
+    def wal_sync(self) -> None:
+        """Durability barrier for acknowledged writes: under the
+        group-commit WAL this waits for (at most) one coalesced
+        flush+fsync covering everything ``put_batch`` acknowledged so
+        far; with the per-append writer (or no storage) it is a no-op
+        — every append was already durable when it returned."""
+        if self._storage is not None:
+            self._storage.wal_sync()
+
+    # -------------------------------------------------------------- io plane
+    def attach_io(self, pool) -> None:
+        """Join a :class:`repro.io.IOPool`: value fetches for large
+        batches are chunked across the pool's workers (fixed-slice
+        scatter into one preallocated array, so results are identical to
+        the inline path for any pool size)."""
+        self._io = pool
+
+    def detach_io(self) -> None:
+        self._io = None
+
+    def _fetch_values(self, vptr: np.ndarray) -> np.ndarray:
+        """Materialize values for a batch of resolved pointers.  Small
+        batches stay inline (a pool round-trip costs more than the arena
+        read); large ones fan out in fixed slices."""
+        pool = self._io
+        b = vptr.shape[0]
+        if pool is None or b <= _IO_FETCH_CHUNK:
+            return self.vlog.get_batch_np(vptr)
+        from repro.io import wait_all
+        out = np.empty((b, self.cfg.value_size), np.uint8)
+
+        def fetch(lo: int, hi: int) -> None:
+            out[lo:hi] = self.vlog.get_batch_np(vptr[lo:hi])
+
+        futs = [pool.submit(fetch, lo, min(lo + _IO_FETCH_CHUNK, b))
+                for lo in range(0, b, _IO_FETCH_CHUNK)]
+        wait_all(futs)
+        return out
 
     # ------------------------------------------------------------------ write
     def put_batch(self, keys: np.ndarray, values: np.ndarray | None = None) -> None:
@@ -561,7 +614,7 @@ class BourbonStore:
         self._tick()
         if self.cfg.fetch_values:
             t0 = self._vf.begin()
-            vals = self.vlog.get_batch_np(vptr)
+            vals = self._fetch_values(vptr)
             self._vf.end(t0)
             return found, vals
         return found, vptr
@@ -878,6 +931,14 @@ class BourbonStore:
               **lb).observe_total(int(split[li, 0]))
             c("engine_probes_total", level=str(li), path="baseline",
               **lb).observe_total(int(split[li, 1]))
+        if self._storage is not None:
+            ws = self._storage.wal_stats()
+            c("store_wal_appends_total", **lb).observe_total(ws["appends"])
+            c("store_wal_fsyncs_total", **lb).observe_total(ws["fsyncs"])
+            c("store_wal_commits_total", **lb).observe_total(ws["commits"])
+            h = reg.histogram("store_wal_group_batch", **lb)
+            for n in self._storage.drain_wal_batch_sizes():
+                h.observe(n)
         g = reg.gauge
         for li, tables in enumerate(self.tree.levels):
             g("store_level_files", level=str(li), **lb).set(len(tables))
@@ -933,5 +994,6 @@ class BourbonStore:
                 manifest_bytes=self._storage.manifest_bytes(),
                 manifest_checkpoints=self.cba.checkpoints,
                 checkpoint_overruns=self.cba.checkpoint_overruns,
+                wal=self._storage.wal_stats(),
             )
         return out

@@ -54,6 +54,7 @@ from repro.core.jaxcompat import make_mesh, set_mesh
 from repro.core.lsm import LSMConfig
 from repro.core.plr import greedy_plr_np
 from repro.core.store import BourbonStore, StoreConfig
+from repro.io import ValueFetch, wait_all
 from repro.obs import NULL_HANDLE, publish_stats
 from repro.storage.format import fsync_dir, sst_path
 from repro.storage.manifest import read_manifest
@@ -204,6 +205,11 @@ class ShardedStore:
         # keep the resolve hot path branch-free when obs is off
         self._obs = None
         self._vf = NULL_HANDLE
+        # host I/O plane (repro.io) — attach_io wires it; None keeps every
+        # path on the original inline code
+        self._io = None
+        self._vf_hidden_us = 0.0     # fetch time overlapped away
+        self._vf_exposed_us = 0.0    # fetch time the caller waited out
 
     # ------------------------------------------------------------- lifecycle
     @classmethod
@@ -310,23 +316,48 @@ class ShardedStore:
         return np.searchsorted(self._splits, np.asarray(keys, np.int64),
                                side="right").astype(np.int32)
 
+    def _fan_out_write(self, keys: np.ndarray, apply) -> None:
+        """Route a write batch to its owning shards and run the per-shard
+        slices — concurrently when an I/O pool is attached.  Shards are
+        fully independent stores (own memtable, WAL, value log), and each
+        key has exactly one owner, so concurrent per-shard application is
+        order-free: results are identical to the sequential loop."""
+        owner = self.shard_of(keys)
+        work = []
+        for i, st in enumerate(self.shards):
+            mask = owner == i
+            if mask.any():
+                work.append((st, mask))
+        if self._io is not None and len(work) > 1:
+            wait_all([self._io.submit(apply, st, mask) for st, mask in work])
+        else:
+            for st, mask in work:
+                apply(st, mask)
+
     def put_batch(self, keys: np.ndarray,
                   values: np.ndarray | None = None) -> None:
         keys = np.asarray(keys, np.int64)
-        owner = self.shard_of(keys)
-        for i, st in enumerate(self.shards):
-            mask = owner == i
-            if mask.any():
-                st.put_batch(keys[mask],
-                             None if values is None else values[mask])
+
+        def apply(st, mask):
+            st.put_batch(keys[mask], None if values is None else values[mask])
+
+        self._fan_out_write(keys, apply)
 
     def delete_batch(self, keys: np.ndarray) -> None:
         keys = np.asarray(keys, np.int64)
-        owner = self.shard_of(keys)
-        for i, st in enumerate(self.shards):
-            mask = owner == i
-            if mask.any():
-                st.delete_batch(keys[mask])
+        self._fan_out_write(keys,
+                            lambda st, mask: st.delete_batch(keys[mask]))
+
+    def wal_sync(self) -> None:
+        """Fleet durability barrier: every shard's acknowledged WAL
+        appends are on disk when this returns.  Under group commit each
+        shard waits one coalesced fsync; with a pool the per-shard waits
+        run concurrently, so the barrier costs ~one sync, not n_shards."""
+        if self._io is not None and self.n_shards > 1:
+            wait_all([self._io.submit(st.wal_sync) for st in self.shards])
+        else:
+            for st in self.shards:
+                st.wal_sync()
 
     def flush_all(self) -> None:
         for st in self.shards:
@@ -469,32 +500,56 @@ class ShardedStore:
                                  n_miss, f_dev, v_dev, tuple(epochs),
                                  self.state_epoch, with_values)
 
-    def resolve_get(self, pb: ShardPendingBatch):
-        """Blocking half: materialize the device futures and merge them
-        under the memtable overlay captured at dispatch."""
+    def resolve_get_async(self, pb: ShardPendingBatch) -> ValueFetch:
+        """Hand the batch's entire blocking half — the device→host sync,
+        the overlay merge, and the per-shard value-log reads — to the I/O
+        pool as ONE :class:`ValueFetch` task.  The caller gets the handle
+        back immediately and can admit/dispatch its next batch while this
+        one materializes on a worker; ``.wait()`` is the join.  Without a
+        pool the task runs inside ``wait()``, reproducing the old
+        synchronous resolve exactly.
+
+        Determinism: the task is self-contained — it reads only the
+        batch's own pinned handle (``pb``) and the immutable snapshot/
+        value-log state the pipeline's barriers guarantee is quiescent
+        while reads are in flight, and scatters into arrays owned by this
+        batch.  Worker count and completion order cannot change any
+        result bit (the CI determinism gate holds us to it)."""
         if pb.resolved:
             raise RuntimeError("ShardPendingBatch already resolved")
         pb.resolved = True
-        found, vptr = pb.found, pb.vptr
-        if pb.f_dev is not None:
-            f2 = np.asarray(pb.f_dev)[:pb.n_miss]
-            v2 = np.asarray(pb.v_dev)[:pb.n_miss]
-            found[pb.miss] = f2
-            vptr[pb.miss] = np.where(f2, v2, -1)
-        found &= vptr >= 0     # located tombstones report not-found
         B = pb.probes.shape[0]
-        self.n_gets += B
-        if pb.with_values:
-            value_size = self.shards[0].cfg.value_size
-            vals = np.zeros((B, value_size), np.uint8)
-            t0 = self._vf.begin()
-            for i, st in enumerate(self.shards):
-                sel = found & (pb.owner == i)
-                if sel.any():
-                    vals[sel] = st.vlog.get_batch_np(vptr[sel])
-            self._vf.end(t0)
-            return found, vals
-        return found, vptr
+        self.n_gets += B               # caller thread: no racing counters
+        found, vptr = pb.found, pb.vptr
+        vals = (np.zeros((B, self.shards[0].cfg.value_size), np.uint8)
+                if pb.with_values else None)
+
+        def task():
+            if pb.f_dev is not None:
+                f2 = np.asarray(pb.f_dev)[:pb.n_miss]
+                v2 = np.asarray(pb.v_dev)[:pb.n_miss]
+                found[pb.miss] = f2
+                vptr[pb.miss] = np.where(f2, v2, -1)
+            # located tombstones report not-found (in place: `found` IS
+            # pb.found, so the returned result sees the update)
+            np.logical_and(found, vptr >= 0, out=found)
+            if vals is not None:
+                for i, st in enumerate(self.shards):
+                    sel = found & (pb.owner == i)
+                    if sel.any():
+                        vals[sel] = st.vlog.get_batch_np(vptr[sel])
+
+        result = (found, vals) if pb.with_values else (found, vptr)
+        return ValueFetch(result, (task,), pool=self._io,
+                          stage=self._vf, on_done=self._vf_overlap)
+
+    def _vf_overlap(self, hidden_us: float, exposed_us: float) -> None:
+        self._vf_hidden_us += hidden_us
+        self._vf_exposed_us += exposed_us
+
+    def resolve_get(self, pb: ShardPendingBatch):
+        """Blocking half: resolve and join the value fetch in one call."""
+        return self.resolve_get_async(pb).wait()
 
     def get_batch(self, probes: np.ndarray, with_values: bool = False):
         """Batched GET: per-shard memtable overlay (newest data wins,
@@ -529,6 +584,21 @@ class ShardedStore:
                 s += 1
         return out
 
+    # -------------------------------------------------------------- io plane
+    def attach_io(self, pool) -> None:
+        """Join the fleet to one host I/O pool: value fetches resolve as
+        overlappable :class:`ValueFetch` handles, per-shard writes and
+        ``wal_sync`` barriers fan out concurrently, and each shard's own
+        large-batch fetches chunk across the same workers."""
+        self._io = pool
+        for st in self.shards:
+            st.attach_io(pool)
+
+    def detach_io(self) -> None:
+        self._io = None
+        for st in self.shards:
+            st.detach_io()
+
     # ------------------------------------------------------------------- obs
     def attach_obs(self, obs) -> None:
         """Join the fleet to one observability plane: every shard reports
@@ -557,6 +627,17 @@ class ShardedStore:
     def _collect_obs(self, reg) -> None:
         reg.counter("fleet_gets_total").observe_total(self.n_gets)
         reg.gauge("fleet_state_epoch").set(self.state_epoch)
+        # value-fetch overlap: fraction of total fetch time that ran
+        # concurrently with other work instead of stalling the caller
+        # (0.0 when inline; → 1.0 as the pool fully hides the fetch)
+        c = reg.counter
+        c("fleet_value_fetch_hidden_us_total").observe_total(
+            self._vf_hidden_us)
+        c("fleet_value_fetch_exposed_us_total").observe_total(
+            self._vf_exposed_us)
+        total_vf = self._vf_hidden_us + self._vf_exposed_us
+        reg.gauge("fleet_value_fetch_overlap_ratio").set(
+            self._vf_hidden_us / total_vf if total_vf else 0.0)
         for i, ep in enumerate(self._shard_epochs()):
             reg.gauge("fleet_shard_epoch", shard=str(i)).set(ep)
         # fleet aggregates; the per-shard dicts are already published by
@@ -596,6 +677,24 @@ class ShardedStore:
                 p.get("manifest_checkpoints", 0) for p in per),
             "checkpoint_us": sum(st.cba.checkpoint_us for st in self.shards),
             "maintenance_us": self.maintenance_us(),
+            # fleet WAL accounting: appends/commits is the group-commit
+            # coalesce factor the write-heavy benchmark reports
+            "wal": {
+                "appends": sum(p.get("wal", {}).get("appends", 0)
+                               for p in per),
+                "fsyncs": sum(p.get("wal", {}).get("fsyncs", 0)
+                              for p in per),
+                "commits": sum(p.get("wal", {}).get("commits", 0)
+                               for p in per),
+            },
+            # resolve overlap: hidden = resolve time spent while the
+            # caller was off doing other work, exposed = time it actually
+            # blocked in wait().  hidden/(hidden+exposed) is the overlap
+            # ratio the threaded serving arm reports
+            "value_fetch": {
+                "hidden_us": self._vf_hidden_us,
+                "exposed_us": self._vf_exposed_us,
+            },
             "shards": per,
             # labeled per-shard breakdown: the aggregate sums above erase
             # which shard did the work; this keyed view preserves it (and

@@ -25,6 +25,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.io import IOPool
 from repro.obs import NULL_TRACER, Obs, ObsConfig, publish_stats
 
 from .admission import Batch, Batcher, RequestQueue, ServerRequest
@@ -45,6 +46,12 @@ class ServerConfig:
     # candidacy) expire instead of freezing with the workload
     idle_tick_us: float = 64.0
     cache_slots: int = 4096         # 0 disables the HotKeyCache
+    # host I/O pool workers (repro.io.IOPool): 0 keeps every fetch, write
+    # fan-out, and WAL sync inline (the seed behavior); N > 0 overlaps
+    # value-log reads with device compute and runs per-shard dispatch
+    # concurrently.  Results are bit-identical for any value (the
+    # determinism gate in scripts/ci.sh holds us to it)
+    io_workers: int = 0
     coordinate_maintenance: bool = True
     coordinator: CoordinatorConfig = dataclasses.field(
         default_factory=CoordinatorConfig)
@@ -76,6 +83,13 @@ class BourbonServer:
         self.max_maintenance_tick_us = 0.0
         self._maint_us_seen = store.maintenance_us()
         self._value_size = store.shards[0].cfg.value_size
+        # host I/O plane: the server owns the pool (like the Obs bundle)
+        # and joins the whole store fleet to it; shutdown() closes it
+        self.io = IOPool(self.cfg.io_workers) if self.cfg.io_workers else None
+        if self.io is not None:
+            store.attach_io(self.io)
+        else:
+            store.detach_io()   # a pool a previous server attached
         # observability: one Obs bundle per server; stage handles are
         # pre-bound here so the per-batch cost is attribute reads only.
         # Obs-off servers hold the null tracer — same call sites, no
@@ -93,11 +107,22 @@ class BourbonServer:
             store.attach_obs(self.obs)
             self.obs.registry.register_collector("server",
                                                  self._collect_obs)
+            if self.io is not None:
+                self.obs.registry.register_collector("io_pool",
+                                                     self._collect_io_obs)
         else:
             # an obs-off server must serve a truly uninstrumented store,
             # even one a previous (obs-on) server attached: the overhead
             # bench compares clean arms
             store.detach_obs()
+
+    def shutdown(self) -> None:
+        """Release the host I/O plane: detach the fleet and stop the pool
+        workers.  Idempotent; the store itself stays open (a closed pool
+        would run any straggler inline, so this is always safe)."""
+        if self.io is not None:
+            self.store.detach_io()
+            self.io.close()
 
     # ------------------------------------------------------------ admission
     def submit(self, req: ServerRequest) -> bool:
@@ -115,6 +140,7 @@ class BourbonServer:
         Returns the requests completed this tick."""
         done: list[ServerRequest] = []
         tick_no = self._tr.begin_tick()
+        wrote = False
         for _ in range(self.cfg.max_batches_per_tick):
             t0 = self._st_coalesce.begin()
             batch = self.batcher.next_batch(self.queue, self.ticks)
@@ -125,7 +151,14 @@ class BourbonServer:
                 self._serve_reads(batch)
             else:
                 self._apply_writes(batch)
+                wrote = True
             done.extend(batch.requests)
+        if wrote:
+            # durability barrier before acknowledging: all write batches
+            # applied this tick coalesce into ONE group-commit sync per
+            # shard (no-op under the per-append writer) — the WAL commit
+            # contract's sync point
+            self.store.wal_sync()
         if not done:
             # an idle tick is still the passage of (virtual) time: advance
             # the shard clocks so T_waits (learning and GC candidacy)
@@ -253,6 +286,17 @@ class BourbonServer:
         s = {k: v for k, v in self.stats().items() if k != "store"}
         publish_stats(reg, "server", s)
 
+    def _collect_io_obs(self, reg) -> None:
+        """Host I/O pool health: queue depth says whether the workers keep
+        up (a persistently deep queue means fetches are backing up behind
+        too few workers); tasks_total is the lifetime submit count."""
+        ps = self.io.stats()
+        g = reg.gauge
+        g("io_pool_workers").set(ps["workers"])
+        g("io_pool_queue_depth").set(ps["depth"])
+        g("io_pool_max_depth").set(ps["max_depth"])
+        reg.counter("io_pool_tasks_total").observe_total(ps["submitted"])
+
     # ----------------------------------------------------------------- stats
     def stats(self) -> dict:
         b = self.batcher
@@ -271,6 +315,7 @@ class BourbonServer:
             "store_probe_keys": self.store_probe_keys,
             "max_maintenance_tick_us": self.max_maintenance_tick_us,
             "cache": self.cache.stats() if self.cache is not None else None,
+            "io": self.io.stats() if self.io is not None else None,
             "coordinator": (self.coordinator.stats()
                             if self.coordinator is not None else None),
             "store": self.store.stats(),

@@ -83,6 +83,10 @@ class _InflightRead:
     # the tick is unsampled) — "compute" is the in-flight span, the time
     # the device had to finish the batch before resolve blocked on it
     t_dispatch: float = 0.0
+    # ValueFetch handle between _begin_retire and _finish_retire: the
+    # batch's value-log reads running on the I/O pool while later batches
+    # begin their own retire (or the next dispatch proceeds)
+    fetch: object = None
 
 
 class PipelinedServer(BourbonServer):
@@ -122,7 +126,17 @@ class PipelinedServer(BourbonServer):
         requests completed this tick."""
         done: list[ServerRequest] = []
         tick_no = self._tr.begin_tick()
+        # prefetch the blocking halves: every batch already in flight had
+        # its device work dispatched on an earlier tick, so start each
+        # one's resolve (device sync + merge + value fetch) on the I/O
+        # pool now — the workers chew on batch N while this tick admits
+        # and dispatches batch N+1.  Without a pool the ValueFetch defers
+        # its task to wait(), reproducing the old serial order, and the
+        # results are bit-identical either way.
+        for fl in self._inflight:
+            self._begin_retire(fl)
         admitted = 0
+        wrote = False
         while admitted < self.cfg.max_batches_per_tick:
             head = self.queue.head()
             if head is None:
@@ -144,6 +158,7 @@ class PipelinedServer(BourbonServer):
                 self._apply_writes(batch)
                 done.extend(batch.requests)
                 self.write_barriers += 1
+                wrote = True
             admitted += 1
         # retire: keep up to ``carry`` batches in flight across the tick
         # boundary — a carried batch computes through the clients' next
@@ -156,8 +171,10 @@ class PipelinedServer(BourbonServer):
             done.extend(self._drain())
         else:
             target = max(0, min(self.cfg.carry, self.cfg.max_inflight - 1))
+            to_retire: list[_InflightRead] = []
             while len(self._inflight) > target:
-                done.extend(self._retire(self._inflight.popleft()))
+                to_retire.append(self._inflight.popleft())
+            done.extend(self._retire_many(to_retire))
         if (self._inflight
                 and self.ticks - self._last_bubble
                 >= self.cfg.force_drain_ticks):
@@ -172,6 +189,12 @@ class PipelinedServer(BourbonServer):
         self.max_maintenance_tick_us = max(self.max_maintenance_tick_us,
                                            m - self._maint_us_seen)
         self._maint_us_seen = m
+        if wrote:
+            # durability barrier before acknowledging: every write batch
+            # this tick applied becomes durable under ONE coalesced
+            # group-commit sync per shard (a no-op per-append writer makes
+            # this free) — the WAL commit contract's sync point
+            self.store.wal_sync()
         for r in done:
             r.completed_tick = self.ticks
             r.done = True
@@ -228,16 +251,30 @@ class PipelinedServer(BourbonServer):
         self.max_depth_seen = max(self.max_depth_seen, len(self._inflight))
         return completed
 
-    def _retire(self, fl: _InflightRead) -> list[ServerRequest]:
-        """Resolve one in-flight batch (the only blocking point) and fan
-        the results back out."""
+    def _begin_retire(self, fl: _InflightRead) -> _InflightRead:
+        """Non-blocking first half of a retire: hand the batch's blocking
+        half (device sync + merge + value fetch) to the I/O pool.  With a
+        pool attached, beginning several retires before finishing any
+        overlaps their resolves with each other and with the next batch's
+        device dispatch; without one the work runs inside
+        :meth:`_finish_retire`, the original serial order.  Idempotent —
+        the tick-start prefetch may begin a batch that a drain later this
+        tick begins again."""
+        if fl.fetch is not None:
+            return fl
         t0 = self._st_resolve.begin()
-        f, v = self.store.resolve_get(fl.pending)
+        fl.fetch = self.store.resolve_get_async(fl.pending)
         self._st_resolve.end(t0)
         # compute = dispatch->retire in-flight span: how long the device
         # had before the host blocked on this batch (crosses ticks; the
         # handle no-ops when the dispatch tick was unsampled)
         self._st_compute.end(fl.t_dispatch)
+        return fl
+
+    def _finish_retire(self, fl: _InflightRead) -> list[ServerRequest]:
+        """Blocking second half: join the value fetch and fan the results
+        back out."""
+        f, v = fl.fetch.wait()
         fl.found[fl.miss] = f
         fl.vals[fl.miss] = v
         self.store_probe_keys += int(fl.miss.sum())
@@ -251,6 +288,22 @@ class PipelinedServer(BourbonServer):
         return self._scatter(fl.batch, fl.found, fl.vals,
                              epochs=fl.pending.epochs)
 
+    def _retire(self, fl: _InflightRead) -> list[ServerRequest]:
+        """Resolve one in-flight batch and fan the results back out."""
+        return self._finish_retire(self._begin_retire(fl))
+
+    def _retire_many(self, fls: list[_InflightRead]) -> list[ServerRequest]:
+        """Retire a group: begin every batch's value fetch before joining
+        any, so the fetches run side by side on the I/O pool.  Requests
+        still complete in pipeline (dispatch) order — the joins are
+        ordered, only the I/O underneath is concurrent."""
+        out: list[ServerRequest] = []
+        for fl in fls:
+            self._begin_retire(fl)
+        for fl in fls:
+            out.extend(self._finish_retire(fl))
+        return out
+
     def _scatter(self, batch: Batch, found, vals, epochs) -> list:
         for req, idx in zip(batch.requests, batch.scatter):
             req.found = found[idx]
@@ -263,10 +316,9 @@ class PipelinedServer(BourbonServer):
 
     def _drain(self) -> list[ServerRequest]:
         """Retire every in-flight batch (pipeline barrier)."""
-        out: list[ServerRequest] = []
-        while self._inflight:
-            out.extend(self._retire(self._inflight.popleft()))
-        return out
+        fls = list(self._inflight)
+        self._inflight.clear()
+        return self._retire_many(fls)
 
     # ----------------------------------------------------------- maintenance
     def _maybe_bubble(self, idle: bool) -> None:

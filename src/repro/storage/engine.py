@@ -28,17 +28,28 @@ from .format import fsync_dir, lmodel_path, manifest_name, sst_path, wal_path
 from .manifest import (ManifestState, ManifestWriter, checkpoint_edit,
                        read_manifest, set_current)
 from .sstable_io import append_model, write_level_model, write_sstable
-from .wal import WALWriter, replay_wal
+from .wal import GroupCommitWAL, WALWriter, replay_wal
 
 __all__ = ["StorageEngine"]
 
 
 class StorageEngine:
-    def __init__(self, dirpath: str, fsync: bool = False) -> None:
+    def __init__(self, dirpath: str, fsync: bool = False,
+                 group_commit: bool = False) -> None:
         os.makedirs(dirpath, exist_ok=True)
         self.dir = dirpath
         self.fsync = fsync
+        # group_commit swaps the WAL writer for the coalescing one: puts
+        # acknowledge before they are durable and wal_sync() is the
+        # durability point (storage README, "WAL commit contract")
+        self.group_commit = group_commit
         self.persisted_models: set[int] = set()
+        # WAL accounting survives rotation: writer instances are recreated
+        # per flush, so their counters are folded in here before hand-off
+        self._wal_appends = 0
+        self._wal_fsyncs = 0
+        self._wal_commits = 0
+        self._wal_batch_tail: list[int] = []
         # one writer per directory: flock dies with the process, so a
         # crashed holder never wedges the store
         self._lock_f = open(os.path.join(dirpath, "LOCK"), "w")
@@ -99,7 +110,12 @@ class StorageEngine:
         # manifest: a crash mid-recovery must re-derive everything from the
         # still-referenced pre-crash WAL
         self.in_recovery = self.recovered
-        self.wal = WALWriter(wal_path(dirpath, self.wal_no), fsync)
+        self.wal = self._new_wal(wal_path(dirpath, self.wal_no))
+
+    def _new_wal(self, path: str):
+        if self.group_commit:
+            return GroupCommitWAL(path, self.fsync)
+        return WALWriter(path, self.fsync)
 
     def ensure_format(self, value_size: int, seg_slots: int,
                       plr_delta: int) -> None:
@@ -125,6 +141,29 @@ class StorageEngine:
     def wal_append(self, keys: np.ndarray, seqs: np.ndarray,
                    vptrs: np.ndarray) -> None:
         self.wal.append(keys, seqs, vptrs)
+
+    def wal_sync(self) -> None:
+        """Durability barrier: returns once every acknowledged WAL append
+        is on disk.  Per-append writers make this a no-op; under group
+        commit it waits for (at most) one coalesced flush+fsync."""
+        self.wal.sync()
+
+    def wal_stats(self) -> dict:
+        """Lifetime WAL accounting across rotations.  ``commits`` counts
+        disk flush groups, so appends/commits is the coalesce factor the
+        group-commit benchmark reports."""
+        return {"appends": self._wal_appends + self.wal.appends,
+                "fsyncs": self._wal_fsyncs + self.wal.fsyncs,
+                "commits": self._wal_commits + self.wal.commits,
+                "group_commit": self.group_commit}
+
+    def drain_wal_batch_sizes(self) -> list[int]:
+        """Per-commit group sizes since the last drain (rotated writers'
+        tails included) — feeds the fsync-batch-size histogram."""
+        out = self._wal_batch_tail
+        self._wal_batch_tail = []
+        out.extend(self.wal.drain_batch_sizes())
+        return out
 
     def replay_old_wal(self):
         """Batches from the pre-crash WAL (recovery re-ingests them into a
@@ -161,11 +200,18 @@ class StorageEngine:
         and AFTER a manifest edit acknowledging wal_no+1 is durable — a
         manifest pointing at a not-yet-created WAL replays as empty, which
         is correct; the reverse order would let acknowledged writes land
-        in a WAL the next recovery's stray sweep deletes."""
+        in a WAL the next recovery's stray sweep deletes.  ``close()``
+        quiesces a group-commit writer (drains + final sync), so a
+        rotated-away WAL never strands queued frames — redundant here
+        anyway, since rotation only happens once the flush covered them."""
         self.wal.close()
+        self._wal_appends += self.wal.appends
+        self._wal_fsyncs += self.wal.fsyncs
+        self._wal_commits += self.wal.commits
+        self._wal_batch_tail.extend(self.wal.drain_batch_sizes())
         old = self.wal_no
         self.wal_no += 1
-        self.wal = WALWriter(wal_path(self.dir, self.wal_no), self.fsync)
+        self.wal = self._new_wal(wal_path(self.dir, self.wal_no))
         return old
 
     # ------------------------------------------------------------- checkpoint

@@ -1,0 +1,393 @@
+"""Host I/O plane: request-order fetch results under out-of-order pool
+completion, group-commit WAL ordering/coalescing, WAL replay after a
+crash mid-coalesce, pool-size determinism through the pipelined server,
+and the durability contract (`put` acknowledged at enqueue, durable at
+``wal_sync``)."""
+
+import gc
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BourbonStore, LSMConfig, StoreConfig
+from repro.core.engine import EngineConfig
+from repro.distributed import ShardedConfig, ShardedStore
+from repro.io import IOFuture, IOPool, ValueFetch, wait_all
+from repro.server import PipelineConfig, PipelinedServer, ServerRequest
+from repro.storage.wal import GroupCommitWAL, WALWriter, replay_wal
+
+VALUE_SIZE = 16
+
+
+def _store_cfg(**kw):
+    defaults = dict(granularity="level", policy="always",
+                    value_size=VALUE_SIZE, vlog_seg_slots=1 << 9,
+                    lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                                  l1_cap_records=1 << 13),
+                    engine=EngineConfig(seg_cap=4096))
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def _keys(n, seed=0, stride=7):
+    return np.random.default_rng(seed).permutation(
+        np.arange(1, n + 1, dtype=np.int64) * stride)
+
+
+def _values(keys, version):
+    v = np.zeros((keys.shape[0], VALUE_SIZE), np.uint8)
+    v[:, 0] = (keys % 251).astype(np.uint8)
+    v[:, 1] = version % 251
+    return v
+
+
+def _sharded(tmp_path, keys, n_shards=2, **kw):
+    bounds = tuple(int(b) for b in
+                   np.quantile(keys, np.arange(1, n_shards) / n_shards))
+    return ShardedStore.open(str(tmp_path / "db"),
+                             ShardedConfig(n_shards=n_shards,
+                                           boundaries=bounds),
+                             _store_cfg(**kw))
+
+
+def _hold_committer(wal: GroupCommitWAL, hold: bool) -> None:
+    with wal._cv:
+        wal._hold = hold
+        wal._cv.notify_all()
+
+
+# ------------------------------------------------------------------ the pool
+
+def test_pool_results_land_in_request_order_under_out_of_order_completion():
+    """Tasks finish in adversarial (reverse) order; fixed-index scatter
+    still produces the request-ordered result, bit-identical to inline."""
+    n_tasks, rows = 8, 4
+    out = np.zeros((n_tasks * rows, 8), np.int64)
+    gate = threading.Event()
+
+    def task(i):
+        # later-submitted tasks complete first: earlier ones wait on the
+        # last one, which flips the gate
+        if i == n_tasks - 1:
+            gate.set()
+        else:
+            assert gate.wait(5.0)
+            time.sleep(0.001 * (n_tasks - i))
+        lo = i * rows
+        out[lo: lo + rows] = i + 1
+
+    pool = IOPool(workers=n_tasks)
+    vf = ValueFetch(out, [lambda i=i: task(i) for i in range(n_tasks)],
+                    pool=pool)
+    got = vf.wait()
+    assert got is out
+    expect = np.repeat(np.arange(1, n_tasks + 1), rows)[:, None] * \
+        np.ones(8, np.int64)
+    np.testing.assert_array_equal(out, expect)
+    # wait() is idempotent, the pool accounted every task
+    assert vf.wait() is out
+    assert pool.stats()["completed"] == n_tasks
+    pool.close()
+
+
+def test_pool_exception_parked_until_join():
+    pool = IOPool(workers=2)
+
+    def boom():
+        raise ValueError("task failed")
+
+    fut = pool.submit(boom)
+    ok = pool.submit(lambda: 41)
+    assert ok.result() == 41        # other tasks unaffected
+    with pytest.raises(ValueError, match="task failed"):
+        fut.result()
+    with pytest.raises(ValueError):
+        wait_all([pool.submit(lambda: 1), pool.submit(boom)])
+    pool.close()
+
+
+def test_closed_pool_runs_submits_inline():
+    pool = IOPool(workers=1)
+    pool.close()
+    pool.close()                    # idempotent
+    fut = pool.submit(lambda a, b: a + b, 2, 3)
+    assert isinstance(fut, IOFuture) and fut.done() and fut.result() == 5
+
+
+def test_valuefetch_without_pool_runs_tasks_at_wait():
+    ran = []
+    vf = ValueFetch("res", [lambda: ran.append(1)])
+    assert ran == []                # nothing runs before the join
+    assert vf.wait() == "res" and ran == [1]
+    assert vf.wait() == "res" and ran == [1]   # idempotent
+
+
+# ------------------------------------------------------------- group commit
+
+def test_group_commit_preserves_append_order_and_coalesces(tmp_path):
+    path = str(tmp_path / "wal-0.log")
+    wal = GroupCommitWAL(path)
+    _hold_committer(wal, True)      # freeze: everything lands in ONE group
+    n_batches = 12
+    for i in range(n_batches):
+        ks = np.arange(i * 10, i * 10 + 10, dtype=np.int64)
+        wal.append(ks, ks + 1, ks + 2)
+    assert wal.commits == 0         # acknowledged, nothing durable yet
+    _hold_committer(wal, False)
+    wal.sync()
+    assert wal.appends == n_batches
+    assert wal.commits == 1         # the whole backlog in one commit group
+    assert wal.drain_batch_sizes() == [n_batches]
+    wal.close()
+    batches = replay_wal(path)
+    assert len(batches) == n_batches
+    for i, (ks, seqs, vptrs) in enumerate(batches):   # strict append order
+        np.testing.assert_array_equal(
+            ks, np.arange(i * 10, i * 10 + 10, dtype=np.int64))
+        np.testing.assert_array_equal(seqs, ks + 1)
+        np.testing.assert_array_equal(vptrs, ks + 2)
+
+
+def test_group_commit_and_per_append_writers_produce_identical_logs(tmp_path):
+    batches = [(np.arange(i * 7, i * 7 + 7, dtype=np.int64),) * 3
+               for i in range(5)]
+    p1, p2 = str(tmp_path / "a.log"), str(tmp_path / "b.log")
+    w1 = WALWriter(p1)
+    w2 = GroupCommitWAL(p2)
+    for ks, seqs, vptrs in batches:
+        w1.append(ks, seqs, vptrs)
+        w2.append(ks, seqs, vptrs)
+    w1.close()
+    w2.close()                      # quiesce: drains every queued frame
+    with open(p1, "rb") as f1, open(p2, "rb") as f2:
+        assert f1.read() == f2.read()
+
+
+def test_group_commit_close_is_a_durability_point(tmp_path):
+    path = str(tmp_path / "wal-0.log")
+    wal = GroupCommitWAL(path)
+    _hold_committer(wal, True)
+    ks = np.arange(20, dtype=np.int64)
+    wal.append(ks, ks, ks)
+    wal.close()                     # must flush the held frame, not drop it
+    assert len(replay_wal(path)) == 1
+
+
+def test_crash_mid_coalesce_keeps_only_committed_prefix(tmp_path):
+    path = str(tmp_path / "wal-0.log")
+    wal = GroupCommitWAL(path)
+    a = np.arange(10, dtype=np.int64)
+    wal.append(a, a, a)
+    wal.sync()                      # batch A durable
+    _hold_committer(wal, True)
+    b = np.arange(100, 110, dtype=np.int64)
+    wal.append(b, b, b)             # acknowledged, never synced
+    wal.crash()
+    batches = replay_wal(path)
+    assert len(batches) == 1        # clean prefix: A survived, B gone
+    np.testing.assert_array_equal(batches[0][0], a)
+
+
+def test_group_commit_sync_surfaces_committer_errors(tmp_path):
+    path = str(tmp_path / "wal-0.log")
+    wal = GroupCommitWAL(path)
+    _hold_committer(wal, True)
+    ks = np.arange(4, dtype=np.int64)
+    wal.append(ks, ks, ks)
+    wal._f.close()                  # inject: the commit write will fail
+    _hold_committer(wal, False)
+    with pytest.raises(ValueError):
+        wal.sync()
+    with pytest.raises(ValueError):   # appends refuse too, not silently lost
+        wal.append(ks, ks, ks)
+
+
+# --------------------------------------------- store-level crash + recovery
+
+def test_store_recovers_after_crash_mid_group_commit(tmp_path):
+    """Kill the store while a later write batch sits un-synced in the
+    commit queue: reopen must replay every batch covered by the last
+    ``wal_sync`` and silently drop the un-acknowledged suffix."""
+    d = str(tmp_path / "db")
+    cfg = _store_cfg(storage_dir=d, wal_group_commit=True,
+                     fetch_values=True)
+    st = BourbonStore.open(d, cfg)
+    synced = _keys(120, seed=5)     # stays below memtable_cap: no flush
+    st.put_batch(synced, _values(synced, 1))
+    st.wal_sync()                   # durability point for `synced`
+    _hold_committer(st._storage.wal, True)
+    lost = synced[:40] + 1          # distinct keys, acknowledged only
+    st.put_batch(lost, _values(lost, 2))
+    st._storage.wal.crash()
+    del st
+    gc.collect()                    # engine finalizer releases the LOCK
+
+    st2 = BourbonStore.open(d, cfg)
+    f, v = st2.get_batch(synced)
+    assert f.all()
+    np.testing.assert_array_equal(v, _values(synced, 1))
+    f_lost, _ = st2.get_batch(lost)
+    assert not f_lost.any()         # un-synced suffix is gone, no error
+    st2.close()
+
+
+def test_wal_sync_durability_survives_reopen_cycles(tmp_path):
+    d = str(tmp_path / "db")
+    cfg = _store_cfg(storage_dir=d, wal_group_commit=True,
+                     fetch_values=True)
+    shadow = {}
+    for cycle in range(3):
+        st = BourbonStore.open(d, cfg)
+        ks = _keys(100, seed=cycle, stride=11 + cycle)
+        st.put_batch(ks, _values(ks, cycle))
+        shadow.update((int(k), cycle) for k in ks)
+        st.wal_sync()
+        st._storage.wal.crash()     # crash AFTER the sync: nothing lost
+        del st
+        gc.collect()
+    st = BourbonStore.open(d, cfg)
+    probes = np.array(sorted(shadow), np.int64)
+    f, v = st.get_batch(probes)
+    assert f.all()
+    for i, k in enumerate(probes):
+        assert v[i, 1] == shadow[int(k)] % 251
+    ws = st._storage.wal_stats()
+    assert ws["group_commit"] and ws["appends"] >= ws["commits"]
+    st.close()
+
+
+# --------------------------------------------------- server-level semantics
+
+def _serve_workload(tmp_path, io_workers, group_commit=False, tag=""):
+    keys = _keys(3000, seed=9)
+    st = _sharded(tmp_path / f"io{io_workers}{tag}", keys,
+                  wal_group_commit=group_commit)
+    srv = PipelinedServer(st, PipelineConfig(max_batch_keys=256,
+                                             max_wait_ticks=0,
+                                             max_inflight=4,
+                                             io_workers=io_workers))
+    rid = 0
+    for off in range(0, keys.shape[0], 500):
+        ks = keys[off: off + 500]
+        assert srv.submit(ServerRequest(rid, "put", ks, _values(ks, 0)))
+        rid += 1
+        srv.run_until_drained()
+    reqs = []
+    for c in range(10):
+        ks = np.concatenate([keys[c * 80: c * 80 + 70],
+                             keys[c * 80: c * 80 + 10] + 1])  # misses
+        r = ServerRequest(rid, "get", ks)
+        rid += 1
+        assert srv.submit(r)
+        reqs.append(r)
+    srv.run_until_drained()
+    out = [(r.found.copy(), r.result.copy()) for r in reqs]
+    stats = srv.stats()
+    srv.shutdown()
+    st.close()
+    return out, stats
+
+
+def test_pool_sizes_and_inline_are_bit_identical(tmp_path):
+    """The CI determinism gate as a test: pool off / 1 worker / 4 workers
+    answer every request identically, with zero epoch violations."""
+    baseline, s0 = _serve_workload(tmp_path, io_workers=0)
+    for w in (1, 4):
+        got, s = _serve_workload(tmp_path, io_workers=w)
+        for (f0, v0), (f1, v1) in zip(baseline, got):
+            np.testing.assert_array_equal(f0, f1)
+            np.testing.assert_array_equal(v0, v1)
+        assert s["pipeline"]["epoch_violations"] == 0
+        assert s["io"]["workers"] == w and s["io"]["depth"] == 0
+    assert s0["pipeline"]["epoch_violations"] == 0
+    assert s0["io"] is None
+
+
+def test_threaded_group_commit_server_matches_oracle(tmp_path):
+    """Interleaved put/get/delete through the threaded pipeline with the
+    group-commit WAL: every GET observes exactly the writes submitted
+    before it, and write acks coalesce (commits < appends)."""
+    keys = _keys(2000, seed=12)
+    st = _sharded(tmp_path, keys, wal_group_commit=True)
+    srv = PipelinedServer(st, PipelineConfig(max_batch_keys=128,
+                                             max_wait_ticks=0,
+                                             max_inflight=4,
+                                             io_workers=3))
+    rng = np.random.default_rng(13)
+    oracle: dict[int, int | None] = {}
+    rid = 0
+    for off in range(0, keys.shape[0], 500):
+        ks = keys[off: off + 500]
+        assert srv.submit(ServerRequest(rid, "put", ks, _values(ks, 0)))
+        rid += 1
+        srv.run_until_drained()
+    oracle.update((int(k), 0) for k in keys)
+    pending = []
+    for step in range(24):
+        op = rng.choice(["put", "get", "get", "delete"])
+        ks = rng.choice(keys, 40, replace=False)
+        if op == "put":
+            ver = step % 251
+            assert srv.submit(ServerRequest(rid, "put", ks,
+                                            _values(ks, ver)))
+            oracle.update((int(k), ver) for k in ks)
+        elif op == "delete":
+            assert srv.submit(ServerRequest(rid, "delete", ks))
+            for k in ks:
+                oracle[int(k)] = None
+        else:
+            r = ServerRequest(rid, "get", ks)
+            assert srv.submit(r)
+            pending.append((r, {int(k): oracle.get(int(k)) for k in ks}))
+        rid += 1
+        if step % 5 == 0:
+            srv.tick()
+    srv.run_until_drained()
+    assert pending
+    for r, expect in pending:
+        assert r.done
+        for i, k in enumerate(r.keys):
+            want = expect[int(k)]
+            if want is None:
+                assert not r.found[i]
+            else:
+                assert r.found[i] and r.result[i, 1] == want
+    stats = srv.stats()
+    assert stats["pipeline"]["epoch_violations"] == 0
+    wal = stats["store"]["wal"]
+    assert wal["appends"] > 0
+    # the committer is eager, so with instant (fsync-off) commits every
+    # group may hold a single frame — coalescing is opportunistic; the
+    # deterministic multi-frame-group claim is the held-committer WAL
+    # tests' job.  Here: never MORE commits than acknowledged appends
+    assert 0 < wal["commits"] <= wal["appends"]
+    srv.shutdown()
+    st.close()
+
+
+def test_io_pool_metrics_reach_the_obs_snapshot(tmp_path):
+    from repro.obs import ObsConfig
+    keys = _keys(800, seed=3)
+    st = _sharded(tmp_path, keys)
+    srv = PipelinedServer(st, PipelineConfig(max_batch_keys=128,
+                                             max_wait_ticks=0,
+                                             io_workers=2,
+                                             obs=ObsConfig(enabled=True,
+                                                           sample_every=1)))
+    rid = 0
+    for off in range(0, keys.shape[0], 400):
+        ks = keys[off: off + 400]
+        assert srv.submit(ServerRequest(rid, "put", ks, _values(ks, 0)))
+        rid += 1
+        srv.run_until_drained()
+    r = ServerRequest(rid, "get", keys[:300])
+    assert srv.submit(r)
+    srv.run_until_drained()
+    snap = srv.obs.registry.snapshot()
+    assert {"io_pool_workers", "io_pool_queue_depth", "io_pool_max_depth",
+            "io_pool_tasks_total",
+            "fleet_value_fetch_overlap_ratio"} <= set(snap)
+    srv.shutdown()
+    st.close()
