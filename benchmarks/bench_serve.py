@@ -118,12 +118,14 @@ GC_ROUNDS = 6 if SMOKE else 16
 GC_KEYS_PER_REQ = 128
 GC_SHARDS = 4
 GC_BATCHES_PER_TICK = 16
-# part A3 (obs tracing overhead): interleaved obs-on/obs-off arms at the
-# acceptance client count; best-of-N per arm absorbs scheduler noise
+# part A3 (obs tracing overhead): interleaved obs-off / obs-on /
+# obs-on+causal-tracing arms at the acceptance client count; best-of-N
+# per arm absorbs scheduler noise
 OBS_CLIENTS = 64
 OBS_TRIALS = 4 if SMOKE else 3        # best-of per arm absorbs CPU noise
 OBS_ROUNDS = 16 if SMOKE else 36      # longer than PIPE_ROUNDS in smoke:
 OBS_SAMPLE_EVERY = 4                  # the 5% gate needs a stable ratio
+TRACE_SAMPLE_EVERY = 64               # causal-tracing arm: the default
 
 
 def _store_cfg(**kw) -> StoreConfig:
@@ -348,12 +350,14 @@ def _run_pipeline_arm(st: ShardedStore, keys: np.ndarray,
 
 
 def _run_obs_arm(st: ShardedStore, keys: np.ndarray, enabled: bool,
-                 seed: int):
-    """One pipelined serving run with tracing on or off; returns
-    (reqs/s, server) — the server is kept alive so the obs-on arm's
-    snapshot/timeline can be exported after the measurement.  Both arms
-    run the *threaded* server (``io_workers=IO_WORKERS``) so the 5%
-    overhead gate covers tracing on the I/O-pool path too."""
+                 seed: int, trace_every: int = 0):
+    """One pipelined serving run; returns (reqs/s, server) — the server
+    is kept alive so an instrumented arm's snapshot/timeline/trace ring
+    can be exported after the measurement.  Every arm runs the
+    *threaded* server (``io_workers=IO_WORKERS``) so the 5% overhead
+    gates cover tracing on the I/O-pool path too.  ``trace_every``
+    feeds ``ObsConfig.trace_sample_every``: 0 disables causal tracing
+    (stage tracer only), >0 samples one request in that many."""
     streams = _request_streams(keys, seed=seed, clients=OBS_CLIENTS,
                                rounds=OBS_ROUNDS,
                                keys_per_req=PIPE_KEYS_PER_REQ)
@@ -364,7 +368,8 @@ def _run_obs_arm(st: ShardedStore, keys: np.ndarray, enabled: bool,
         carry=PIPE_CARRY, coordinate_maintenance=True,
         io_workers=IO_WORKERS,
         coordinator=CoordinatorConfig(budget_us_per_tick=BUDGET_US),
-        obs=ObsConfig(enabled=enabled, sample_every=OBS_SAMPLE_EVERY)))
+        obs=ObsConfig(enabled=enabled, sample_every=OBS_SAMPLE_EVERY,
+                      trace_sample_every=trace_every)))
     try:
         rps, _, _, _ = _closed_loop_async(srv, streams, OBS_CLIENTS,
                                           OBS_ROUNDS)
@@ -373,21 +378,30 @@ def _run_obs_arm(st: ShardedStore, keys: np.ndarray, enabled: bool,
     return rps, srv
 
 
+# arm → (ObsConfig.enabled, ObsConfig.trace_sample_every)
+_OBS_ARMS = {"off": (False, 0),                      # uninstrumented
+             "on": (True, 0),                        # stage tracer only
+             "trace": (True, TRACE_SAMPLE_EVERY)}    # + causal tracing
+
+
 def _obs_overhead(st: ShardedStore, keys: np.ndarray) -> None:
-    """Part A3: the tracing-overhead acceptance arm.  Identical pipelined
-    serving runs with obs on and off, interleaved (off first, so the on
-    arm never rides a warmer store), best-of-``OBS_TRIALS`` per arm; the
-    on arm then reports the per-stage latency breakdown and the snapshot
-    + timeline land in the suite's JSON artifact."""
-    best = {"off": 0.0, "on": 0.0}
-    srv_on = None
+    """Part A3: the tracing-overhead acceptance arms.  Identical
+    pipelined serving runs with obs off, obs on (stage tracer), and obs
+    on + causal tracing at the default sample rate — interleaved (off
+    first, so an instrumented arm never rides a warmer store), best-of
+    -``OBS_TRIALS`` per arm.  The traced arm then reports the per-stage
+    breakdown, and its snapshot + timeline + span-ring summary land in
+    the suite's JSON artifact."""
+    best = {arm: 0.0 for arm in _OBS_ARMS}
+    srv_tr = None
     for t in range(OBS_TRIALS):
-        for arm in ("off", "on"):
-            rps, srv = _run_obs_arm(st, keys, arm == "on", seed=40 + t)
+        for arm, (enabled, trace_every) in _OBS_ARMS.items():
+            rps, srv = _run_obs_arm(st, keys, enabled, seed=40 + t,
+                                    trace_every=trace_every)
             best[arm] = max(best[arm], rps)
-            if arm == "on":
-                srv_on = srv
-    snap = srv_on.obs.snapshot()
+            if arm == "trace":
+                srv_tr = srv
+    snap = srv_tr.obs.snapshot()
     for s in snap["server_stage_us"]["samples"]:
         stage = dict(s["labels"])["stage"]
         v = s["value"]
@@ -398,8 +412,25 @@ def _obs_overhead(st: ShardedStore, keys: np.ndarray) -> None:
          f"obs_on_rps={best['on']:.0f} obs_off_rps={best['off']:.0f} "
          f"ratio={ratio:.3f} within_5pct={ratio >= 0.95} "
          f"sample_every={OBS_SAMPLE_EVERY} trials={OBS_TRIALS}")
-    common.set_artifact_extra("obs", {"snapshot": snap,
-                                      "timeline": srv_on.obs.timeline()})
+    ct = srv_tr.obs.ctrace
+    spans = ct.spans()
+    tratio = best["trace"] / max(best["off"], 1e-9)
+    pv = srv_tr.stats()["pipeline"]["epoch_violations"]
+    emit(f"serve/obs_trace_overhead.c{OBS_CLIENTS}", 0.0,
+         f"trace_rps={best['trace']:.0f} obs_off_rps={best['off']:.0f} "
+         f"ratio={tratio:.3f} within_5pct={tratio >= 0.95} "
+         f"trace_sample_every={TRACE_SAMPLE_EVERY} "
+         f"traced={ct.traced_requests} completed={ct.completed_requests} "
+         f"spans={len(spans)} epoch_violations={pv}")
+    assert pv == 0, "traced threaded arm broke epoch pinning"
+    common.set_artifact_extra("obs", {
+        "snapshot": snap,
+        "timeline": srv_tr.obs.timeline(),
+        "trace": {"sample_every": TRACE_SAMPLE_EVERY,
+                  "traced_requests": ct.traced_requests,
+                  "completed_requests": ct.completed_requests,
+                  "spans_in_ring": len(spans),
+                  "span_names": sorted({s.name for s in spans})}})
 
 
 def _obs_part() -> None:

@@ -1,0 +1,204 @@
+#!/usr/bin/env python
+"""Benchmark trajectory gate: fresh artifacts vs committed baselines.
+
+CI re-runs every benchmark suite and overwrites
+``bench_artifacts/BENCH_<suite>.json`` in the working tree; the version
+at ``HEAD`` is the committed baseline.  This script diffs the two per
+record (``us_per_call``, lower is better) and prints a trajectory
+table, so a perf regression is *named* in the CI log next to the run
+that introduced it instead of discovered archaeologically.
+
+Noise discipline (a shared-CPU container jitters single runs):
+
+* ``--tolerance`` (default 0.25): a record only counts as a regression
+  / improvement when it moved more than ±25% against its baseline.
+* ``--min-us`` (default 5.0): records where both sides are under the
+  floor are timer noise — reported, never gated.
+* a config mismatch (smoke vs full, different ``n_keys``/``n_ops``/
+  ``batch``) makes the whole suite informational: the numbers are not
+  comparable, so the table is printed but nothing is gated.
+
+Warn-by-default: exit 0 with a WARN block unless ``--strict`` (or
+``REPRO_BENCH_STRICT=1`` via ci.sh) makes regressions fatal.  Suites
+and records with no baseline are "new" — never a failure, growth is
+the point.
+
+Usage::
+
+    python scripts/check_bench_regression.py [artifact.json ...]
+        [--baseline DIR] [--tolerance 0.25] [--min-us 5.0] [--strict]
+
+With no artifact arguments, every ``BENCH_*.json`` under
+``$REPRO_BENCH_ARTIFACTS`` (default ``bench_artifacts/``) is checked.
+``--baseline DIR`` reads baselines from a directory instead of
+``git show HEAD:`` (for comparing two saved artifact sets offline).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# config keys that must match for a latency comparison to mean anything
+CONFIG_KEYS = ("smoke", "full", "n_keys", "n_ops", "batch")
+
+
+def _load(path: str):
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+# committed baseline snapshots (bench_artifacts/ itself is gitignored —
+# the working-tree artifacts are the *fresh* side of the diff)
+BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
+
+
+def load_baseline(path: str, baseline_dir: str | None):
+    """Return (baseline_dict | None, source_label).  Resolution order:
+    an explicit ``--baseline`` dir, the artifact's own committed
+    content (``git show HEAD:``, for trees that track artifacts), then
+    the committed snapshot under ``benchmarks/baselines/``."""
+    name = os.path.basename(path)
+    if baseline_dir:
+        p = os.path.join(baseline_dir, name)
+        try:
+            return _load(p), p
+        except (OSError, ValueError):
+            return None, p
+    rel = os.path.relpath(os.path.abspath(path), REPO).replace(os.sep, "/")
+    try:
+        out = subprocess.run(["git", "show", f"HEAD:{rel}"], cwd=REPO,
+                             capture_output=True, check=False)
+        if out.returncode == 0:
+            return json.loads(out.stdout.decode("utf-8")), f"HEAD:{rel}"
+    except (OSError, ValueError):
+        pass
+    p = os.path.join(BASELINE_DIR, name)
+    try:
+        return _load(p), os.path.relpath(p, REPO)
+    except (OSError, ValueError):
+        return None, p
+
+
+def config_mismatch(base: dict, cur: dict) -> list[str]:
+    b, c = base.get("config", {}), cur.get("config", {})
+    return [f"{k}: {b.get(k)!r} -> {c.get(k)!r}"
+            for k in CONFIG_KEYS if b.get(k) != c.get(k)]
+
+
+def compare_suite(base: dict, cur: dict, tolerance: float,
+                  min_us: float):
+    """Rows of (name, base_us, cur_us, delta_pct|None, verdict)."""
+    by_name = {r["name"]: r for r in base.get("results", ())}
+    rows = []
+    for r in cur.get("results", ()):
+        name, cur_us = r["name"], float(r.get("us_per_call") or 0.0)
+        b = by_name.pop(name, None)
+        if b is None:
+            rows.append((name, None, cur_us, None, "new"))
+            continue
+        base_us = float(b.get("us_per_call") or 0.0)
+        if base_us <= 0.0 or cur_us <= 0.0:
+            rows.append((name, base_us, cur_us, None, "n/a"))
+        elif base_us < min_us and cur_us < min_us:
+            rows.append((name, base_us, cur_us,
+                         (cur_us / base_us - 1.0) * 100.0, "tiny"))
+        else:
+            delta = cur_us / base_us - 1.0
+            verdict = ("regressed" if delta > tolerance
+                       else "improved" if delta < -tolerance else "ok")
+            rows.append((name, base_us, cur_us, delta * 100.0, verdict))
+    for name in by_name:        # baseline-only: the record went away
+        rows.append((name, float(by_name[name].get("us_per_call")
+                                 or 0.0), None, None, "removed"))
+    return rows
+
+
+def _us(v) -> str:
+    return "-" if v is None else f"{v:12.1f}"
+
+
+def print_table(rows) -> None:
+    print(f"  {'record':<40} {'baseline us':>12} {'current us':>12} "
+          f"{'delta':>8}  verdict")
+    for name, b, c, d, verdict in rows:
+        ds = "-" if d is None else f"{d:+7.1f}%"
+        print(f"  {name:<40} {_us(b):>12} {_us(c):>12} {ds:>8}  "
+              f"{verdict}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifacts", nargs="*",
+                    help="BENCH_*.json files (default: all under the "
+                         "artifact dir)")
+    ap.add_argument("--baseline", default=None, metavar="DIR",
+                    help="read baselines from DIR instead of "
+                         "'git show HEAD:'")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="noise band: |delta| beyond this fraction "
+                         "counts (default 0.25)")
+    ap.add_argument("--min-us", type=float, default=5.0,
+                    help="records under this on both sides are timer "
+                         "noise, never gated (default 5.0)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on regressions (default: warn only)")
+    args = ap.parse_args(argv)
+
+    paths = args.artifacts or sorted(glob.glob(os.path.join(
+        os.environ.get("REPRO_BENCH_ARTIFACTS",
+                       os.path.join(REPO, "bench_artifacts")),
+        "BENCH_*.json")))
+    if not paths:
+        print("check_bench_regression: no artifacts found")
+        return 0
+
+    regressions, improvements = [], []
+    for path in paths:
+        try:
+            cur = _load(path)
+        except (OSError, ValueError) as exc:
+            print(f"suite {os.path.basename(path)}: unreadable ({exc})")
+            continue
+        suite = cur.get("suite", os.path.basename(path))
+        base, src = load_baseline(path, args.baseline)
+        if base is None:
+            print(f"suite {suite}: NEW (no baseline at {src})")
+            continue
+        mismatch = config_mismatch(base, cur)
+        rows = compare_suite(base, cur, args.tolerance, args.min_us)
+        if mismatch:
+            print(f"suite {suite}: CONFIG MISMATCH vs {src} "
+                  f"({'; '.join(mismatch)}) — informational only")
+        else:
+            print(f"suite {suite}: vs {src} "
+                  f"(tolerance ±{args.tolerance:.0%}, "
+                  f"floor {args.min_us}us)")
+        print_table(rows)
+        if not mismatch:
+            regressions += [(suite, r) for r in rows
+                            if r[4] == "regressed"]
+            improvements += [(suite, r) for r in rows
+                             if r[4] == "improved"]
+        print()
+
+    print(f"trajectory: {len(improvements)} improved, "
+          f"{len(regressions)} regressed "
+          f"(beyond ±{args.tolerance:.0%})")
+    for suite, (name, b, c, d, _) in regressions:
+        print(f"  REGRESSION {suite}:{name} {b:.1f}us -> {c:.1f}us "
+              f"({d:+.1f}%)")
+    if regressions and not args.strict:
+        print("WARN: regressions above are non-fatal "
+              "(re-run with --strict to gate)")
+    return 1 if (regressions and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,9 +2,12 @@
 """CI gate over the serve_obs artifact (BENCH_serve_obs.json).
 
 Passes iff the obs-on arm held its throughput (within_5pct on the
-``serve/obs_overhead.*`` record) AND the traced run produced a sampled
-observation for every read-path stage — a breakdown with silent stages
-would mean the tracer is wired to the wrong call sites.
+``serve/obs_overhead.*`` record), the causal-tracing arm held its
+throughput too (``serve/obs_trace_overhead.*`` at the default
+``trace_sample_every``, with spans actually recorded and zero epoch
+violations), AND the traced run produced a sampled observation for
+every read-path stage — a breakdown with silent stages would mean the
+tracer is wired to the wrong call sites.
 
     python scripts/check_obs_overhead.py bench_artifacts/BENCH_serve_obs.json
 """
@@ -39,6 +42,26 @@ def main() -> int:
               f"({rec['derived']})")
         return 1
 
+    tr = [r for n, r in results.items()
+          if n.startswith("serve/obs_trace_overhead.")]
+    if not tr:
+        print(f"FAIL: no serve/obs_trace_overhead record in {path}")
+        return 1
+    trec = tr[0]
+    tratio = trec["fields"].get("ratio")
+    if trec["fields"].get("within_5pct") != "True":
+        print(f"FAIL: causal-tracing throughput ratio {tratio} below "
+              f"0.95 ({trec['derived']})")
+        return 1
+    if float(trec["fields"].get("traced", 0)) <= 0 \
+            or float(trec["fields"].get("spans", 0)) <= 0:
+        print(f"FAIL: tracing arm recorded no spans ({trec['derived']})")
+        return 1
+    if float(trec["fields"].get("epoch_violations", 0)) != 0:
+        print(f"FAIL: tracing arm saw epoch violations "
+              f"({trec['derived']})")
+        return 1
+
     missing = [s for s in STAGES
                if results.get(f"serve/obs_stage.{s}", {})
                .get("fields", {}).get("count", 0) <= 0]
@@ -51,8 +74,8 @@ def main() -> int:
         print("FAIL: artifact carries no obs snapshot")
         return 1
 
-    print(f"OK: obs overhead ratio={ratio}, all "
-          f"{len(STAGES)} stages observed")
+    print(f"OK: obs overhead ratio={ratio}, tracing ratio={tratio}, "
+          f"all {len(STAGES)} stages observed")
     return 0
 
 

@@ -82,3 +82,10 @@ for attempt in 1 2 3; do
     echo "WARN: obs overhead gate attempt ${attempt} failed; retrying"
 done
 [ "$obs_ok" = "1" ] || { echo "FAIL: obs overhead gate"; exit 1; }
+
+# benchmark trajectory: diff every fresh artifact written above against
+# the committed baselines (benchmarks/baselines/) with a ±25% noise
+# band.  Warn-by-default — a shared-CPU container jitters absolute
+# latencies — set REPRO_BENCH_STRICT=1 to make regressions fatal
+python scripts/check_bench_regression.py \
+    ${REPRO_BENCH_STRICT:+--strict}

@@ -23,7 +23,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.obs import NULL_HANDLE, publish_stats
+from repro.obs import NULL_CTRACE, NULL_HANDLE, publish_stats
 
 from .cba import (CBAConfig, LearningExecutor, MaintenanceConfig,
                   MaintenanceScheduler)
@@ -887,6 +887,10 @@ class BourbonStore:
         self.executor.events = obs.events
         self.engine.record_probe_split = True
         self._vf = obs.tracer.stage("value_fetch")
+        if self._storage is not None:
+            # traced writes span into the WAL: append -> commit-group
+            # fsync becomes a causal fan-in in the span graph
+            self._storage.set_tracer(obs.ctrace)
         key = ("store", tuple(sorted(self._obs_labels.items())))
         obs.registry.register_collector(key, self._collect_obs)
 
@@ -904,6 +908,8 @@ class BourbonStore:
         self.executor.events = None
         self.engine.record_probe_split = False
         self._vf = NULL_HANDLE
+        if self._storage is not None:
+            self._storage.set_tracer(NULL_CTRACE)
 
     def _collect_obs(self, reg) -> None:
         """Snapshot-time collector: curated monotonic counters (restart-

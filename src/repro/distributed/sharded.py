@@ -55,7 +55,7 @@ from repro.core.lsm import LSMConfig
 from repro.core.plr import greedy_plr_np
 from repro.core.store import BourbonStore, StoreConfig
 from repro.io import ValueFetch, wait_all
-from repro.obs import NULL_HANDLE, publish_stats
+from repro.obs import NULL_CTRACE, NULL_HANDLE, publish_stats
 from repro.storage.format import fsync_dir, sst_path
 from repro.storage.manifest import read_manifest
 from repro.storage.sstable_io import load_sstable
@@ -181,6 +181,9 @@ class ShardPendingBatch:
     state_epoch: int               # device-state generation at dispatch
     with_values: bool
     resolved: bool = False
+    # causal-tracing span the batch was dispatched under (the server's
+    # "dispatch" span); None for the unsampled many
+    trace: object = None
 
 
 class ShardedStore:
@@ -205,6 +208,7 @@ class ShardedStore:
         # keep the resolve hot path branch-free when obs is off
         self._obs = None
         self._vf = NULL_HANDLE
+        self._ct = NULL_CTRACE
         # host I/O plane (repro.io) — attach_io wires it; None keeps every
         # path on the original inline code
         self._io = None
@@ -468,14 +472,16 @@ class ShardedStore:
         return _local_get_all_shards(state, jnp.asarray(buf),
                                      self.n_shards, self.delta)
 
-    def dispatch_get(self, probes: np.ndarray,
-                     with_values: bool = False) -> ShardPendingBatch:
+    def dispatch_get(self, probes: np.ndarray, with_values: bool = False,
+                     trace=None) -> ShardPendingBatch:
         """Non-blocking half of :meth:`get_batch`: memtable overlays are
         answered host-side, the snapshot path is launched on device, and
         the returned handle is pinned to the single epoch-versioned
         device state current at dispatch.  Resolve with
         :meth:`resolve_get`; multiple dispatched batches may be in flight
-        at once and (absent interleaved writes) share one state epoch."""
+        at once and (absent interleaved writes) share one state epoch.
+        ``trace`` is the caller's causal dispatch span (or None): each
+        shard's overlay probe becomes a fan-out ``shard_probe`` child."""
         probes = np.asarray(probes, np.int64)
         B = probes.shape[0]
         owner = self.shard_of(probes)
@@ -485,9 +491,12 @@ class ShardedStore:
             idx = np.nonzero(owner == i)[0]
             if idx.shape[0] == 0:
                 continue
+            ssp = self._ct.begin_span("shard_probe", trace, link=trace,
+                                      shard=i, keys=int(idx.shape[0]))
             f, v = st.memtable.get_batch(probes[idx])
             mt_hit[idx[f]] = True
             vptr[idx[f]] = v[f]
+            self._ct.end_span(ssp)
         miss = ~mt_hit
         n_miss = int(miss.sum())
         f_dev = v_dev = None
@@ -498,7 +507,8 @@ class ShardedStore:
             epochs = self._shard_epochs()
         return ShardPendingBatch(probes, owner, mt_hit.copy(), vptr, miss,
                                  n_miss, f_dev, v_dev, tuple(epochs),
-                                 self.state_epoch, with_values)
+                                 self.state_epoch, with_values,
+                                 trace=trace)
 
     def resolve_get_async(self, pb: ShardPendingBatch) -> ValueFetch:
         """Hand the batch's entire blocking half — the device→host sync,
@@ -523,6 +533,12 @@ class ShardedStore:
         found, vptr = pb.found, pb.vptr
         vals = (np.zeros((B, self.shards[0].cfg.value_size), np.uint8)
                 if pb.with_values else None)
+        # the blocking half's causal span: begun here on the caller, ended
+        # inside the task — which may run on an IOPool worker thread
+        # (retrack re-stamps the track) or inline at wait()
+        iosp = self._ct.begin_span("io_task", pb.trace, link=pb.trace,
+                                   keys=B)
+        ct = self._ct
 
         def task():
             if pb.f_dev is not None:
@@ -538,10 +554,12 @@ class ShardedStore:
                     sel = found & (pb.owner == i)
                     if sel.any():
                         vals[sel] = st.vlog.get_batch_np(vptr[sel])
+            ct.end_span(iosp, retrack=True)
 
         result = (found, vals) if pb.with_values else (found, vptr)
         return ValueFetch(result, (task,), pool=self._io,
-                          stage=self._vf, on_done=self._vf_overlap)
+                          stage=self._vf, on_done=self._vf_overlap,
+                          span=iosp)
 
     def _vf_overlap(self, hidden_us: float, exposed_us: float) -> None:
         self._vf_hidden_us += hidden_us
@@ -609,6 +627,7 @@ class ShardedStore:
         cross-shard aggregates."""
         self._obs = obs
         self._vf = obs.tracer.stage("value_fetch")
+        self._ct = obs.ctrace
         for i, st in enumerate(self.shards):
             st.attach_obs(obs, labels={"shard": str(i)})
         obs.registry.register_collector(("fleet", self.path),
@@ -621,6 +640,7 @@ class ShardedStore:
             self._obs.registry.unregister_collector(("fleet", self.path))
         self._obs = None
         self._vf = NULL_HANDLE
+        self._ct = NULL_CTRACE
         for st in self.shards:
             st.detach_obs()
 

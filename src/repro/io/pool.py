@@ -172,14 +172,18 @@ class ValueFetch:
     device work before the caller blocked)."""
 
     __slots__ = ("_result", "_tasks", "_futs", "_stage", "_on_done",
-                 "_t0", "_done")
+                 "_t0", "_done", "span")
 
     def __init__(self, result: Any, tasks: Sequence[Callable],
                  pool: IOPool | None = None, stage=NULL_HANDLE,
-                 on_done: Callable | None = None) -> None:
+                 on_done: Callable | None = None, span=None) -> None:
         self._result = result
         self._stage = stage
         self._on_done = on_done
+        # causal-tracing span of the blocking half (repro.obs.trace): the
+        # producer parks it here so the join site can flow-link its
+        # exposed wait back to the worker-side io_task span
+        self.span = span
         self._done = False
         self._t0 = _now()
         if pool is not None and tasks:

@@ -76,7 +76,7 @@ class Histogram:
     nanoseconds through maintenance stalls without configuration."""
 
     kind = "histogram"
-    __slots__ = ("sum", "count", "max", "buckets")
+    __slots__ = ("sum", "count", "max", "buckets", "exemplars")
     BOUNDS = tuple(float(1 << i) for i in range(21))
 
     def __init__(self) -> None:
@@ -84,6 +84,10 @@ class Histogram:
         self.count = 0
         self.max = 0.0
         self.buckets = [0] * (len(self.BOUNDS) + 1)
+        # bucket index -> {"trace_id": int, "value": float}; latest trace
+        # exemplar per bucket (a fat-tail bucket links to a concrete
+        # trace a human can pull up with describe_trace)
+        self.exemplars: dict[int, dict] = {}
 
     def observe(self, x: float) -> None:
         x = float(x)
@@ -92,6 +96,14 @@ class Histogram:
         if x > self.max:
             self.max = x
         self.buckets[bisect.bisect_left(self.BOUNDS, x)] += 1
+
+    def annotate(self, x: float, trace_id: int) -> None:
+        """Attach a trace exemplar to the bucket ``x`` falls in (does
+        not count as an observation — the causal tracer annotates the
+        same families the StageTracer populates)."""
+        x = float(x)
+        self.exemplars[bisect.bisect_left(self.BOUNDS, x)] = {
+            "trace_id": int(trace_id), "value": x}
 
     @property
     def mean(self) -> float:
@@ -171,10 +183,76 @@ class MetricsRegistry:
                     value = {"sum": float(inst.sum), "count": int(inst.count),
                              "max": float(inst.max),
                              "buckets": [int(b) for b in inst.buckets]}
+                    if inst.exemplars:
+                        value["exemplars"] = {
+                            str(i): {"trace_id": int(e["trace_id"]),
+                                     "value": float(e["value"])}
+                            for i, e in sorted(inst.exemplars.items())}
                 else:
                     value = float(inst.value)
                 samples.append({"labels": dict(key), "value": value})
             out[name] = {"kind": fam["kind"], "samples": samples}
+        return out
+
+    def delta(self, prev: dict, cur: dict | None = None) -> dict:
+        """Rolling-rate view between two snapshots (the self-tuning
+        controller's per-interval observation vector in one call).
+
+        ``prev`` is an earlier :meth:`snapshot`; ``cur`` defaults to a
+        fresh one.  Same shape as a snapshot, but values are per-window:
+
+        * counters — ``cur - prev``, with the same restart rule as
+          :meth:`Counter.observe_total`: a current value *below* the
+          previous one means the source restarted, so the whole current
+          value is fresh progress for the window.
+        * gauges — the current value (point-in-time by definition).
+        * histograms — per-bucket count deltas plus sum/count deltas
+          (restart rule keyed on ``count``); ``max`` is the current max
+          (no windowed max is recoverable from two cumulative
+          snapshots).  Exemplars are dropped — they are not rates.
+
+        Samples new in ``cur`` count from zero; samples only in ``prev``
+        (a detached source) are omitted.
+        """
+        if cur is None:
+            cur = self.snapshot()
+
+        def _index(snap_fam) -> dict:
+            return {self._label_key(s["labels"]): s["value"]
+                    for s in snap_fam["samples"]}
+
+        out: dict = {}
+        for name in sorted(cur):
+            fam = cur[name]
+            kind = fam["kind"]
+            prev_by = _index(prev[name]) if name in prev \
+                and prev[name]["kind"] == kind else {}
+            samples = []
+            for s in fam["samples"]:
+                key = self._label_key(s["labels"])
+                cv, pv = s["value"], prev_by.get(key)
+                if kind == "counter":
+                    if pv is None or cv < pv:      # new or restarted
+                        value = float(cv)
+                    else:
+                        value = float(cv) - float(pv)
+                elif kind == "gauge":
+                    value = float(cv)
+                else:
+                    if pv is None or cv["count"] < pv["count"]:
+                        value = {"sum": float(cv["sum"]),
+                                 "count": int(cv["count"]),
+                                 "max": float(cv["max"]),
+                                 "buckets": [int(b) for b in cv["buckets"]]}
+                    else:
+                        value = {"sum": float(cv["sum"]) - float(pv["sum"]),
+                                 "count": int(cv["count"]) - int(pv["count"]),
+                                 "max": float(cv["max"]),
+                                 "buckets": [int(a) - int(b) for a, b in
+                                             zip(cv["buckets"],
+                                                 pv["buckets"])]}
+                samples.append({"labels": dict(key), "value": value})
+            out[name] = {"kind": kind, "samples": samples}
         return out
 
 

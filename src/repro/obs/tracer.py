@@ -154,9 +154,17 @@ class EventLog:
     def __init__(self, cap: int = 1024) -> None:
         self._events: deque = deque(maxlen=int(cap))
         self.total = 0
+        # optional ambient-context hook (set by Obs): a callable
+        # returning fields merged under every entry — the serving stack
+        # stamps `tick` and `trace_id` so a GC/learn/checkpoint decision
+        # correlates with the causal spans of the tick it ran in
+        self.stamp = None
 
     def log(self, kind: str, **fields) -> None:
-        self._events.append({"kind": kind, **fields})
+        if self.stamp is None:
+            self._events.append({"kind": kind, **fields})
+        else:
+            self._events.append({"kind": kind, **self.stamp(), **fields})
         self.total += 1
 
     def tail(self, n: int | None = None) -> list[dict]:

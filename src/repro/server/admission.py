@@ -47,6 +47,9 @@ class ServerRequest:
     # the pipelined server; None when the cache answered every key — cache
     # entries are themselves epoch-stamped)
     epochs_served: tuple | None = None
+    # causal-tracing context minted at admission for sampled requests
+    # (a repro.obs.trace.TraceContext); None for the unsampled many
+    trace: object | None = None
 
     def __post_init__(self) -> None:
         if self.op not in OPS:

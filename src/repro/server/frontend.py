@@ -26,7 +26,7 @@ import dataclasses
 import numpy as np
 
 from repro.io import IOPool
-from repro.obs import NULL_TRACER, Obs, ObsConfig, publish_stats
+from repro.obs import NULL_CTRACE, NULL_TRACER, Obs, ObsConfig, publish_stats
 
 from .admission import Batch, Batcher, RequestQueue, ServerRequest
 from .cache import HotKeyCache
@@ -97,6 +97,10 @@ class BourbonServer:
         self.obs = Obs(self.cfg.obs) if self.cfg.obs.enabled else None
         tr = self.obs.tracer if self.obs is not None else NULL_TRACER
         self._tr = tr
+        # causal tracer: one identity test per call site when tracing is
+        # off (NULL_CTRACE) or the request is unsampled (trace is None)
+        self._ct = self.obs.ctrace if self.obs is not None else NULL_CTRACE
+        self._wal_parent = None    # last traced write batch span this tick
         self._st_admission = tr.stage("admission")
         self._st_coalesce = tr.stage("coalesce")
         self._st_cache = tr.stage("cache_probe")
@@ -130,6 +134,10 @@ class BourbonServer:
         retry after a tick)."""
         t0 = self._st_admission.begin()
         ok = self.queue.submit(req, self.ticks)
+        if ok and req.trace is None:
+            # mint the causal trace at admission (countdown-sampled; a
+            # backpressured retry keeps its original trace)
+            req.trace = self._ct.admit(self.ticks)
         self._st_admission.end(t0)
         return ok
 
@@ -158,7 +166,10 @@ class BourbonServer:
             # applied this tick coalesce into ONE group-commit sync per
             # shard (no-op under the per-append writer) — the WAL commit
             # contract's sync point
+            wsp = self._ct.begin_span("wal_sync", self._wal_parent)
             self.store.wal_sync()
+            self._ct.end_span(wsp)
+            self._wal_parent = None
         if not done:
             # an idle tick is still the passage of (virtual) time: advance
             # the shard clocks so T_waits (learning and GC candidacy)
@@ -170,10 +181,12 @@ class BourbonServer:
         # the shards self-drive GC/checkpointing) under any load shape —
         # _maintenance_tick no-ops on deferred shards, so this never
         # bypasses the coordinator's budget
+        msp = self._ct.begin_maintenance(self.ticks, kind="tick")
         for sh in self.store.shards:
             sh._tick()
         if self.coordinator is not None:
             self.coordinator.tick()
+        self._ct.end_maintenance(msp)
         m = self.store.maintenance_us()
         self.max_maintenance_tick_us = max(self.max_maintenance_tick_us,
                                            m - self._maint_us_seen)
@@ -181,6 +194,7 @@ class BourbonServer:
         for r in done:
             r.completed_tick = self.ticks
             r.done = True
+            self._ct.complete(r.trace, tick=self.ticks)
         self.completed += len(done)
         self._tr.end_tick(tick_no)
         self.ticks += 1
@@ -198,6 +212,7 @@ class BourbonServer:
     # ----------------------------------------------------------------- reads
     def _serve_reads(self, batch: Batch) -> None:
         uniq = batch.keys
+        bt = self._ct.join_batch(batch.requests)
         vals = np.zeros((uniq.shape[0], self._value_size), np.uint8)
         found = np.zeros(uniq.shape[0], bool)
         if self.cache is not None:
@@ -220,12 +235,19 @@ class BourbonServer:
             # server's; "compute" here is the whole dispatch->resolve
             # span (nothing overlaps it)
             tc = self._st_compute.begin()
+            csp = self._ct.begin_span("device_compute", bt)
             t0 = self._st_dispatch.begin()
-            pb = self.store.dispatch_get(uniq[miss], with_values=True)
+            dsp = self._ct.begin_span("dispatch", bt)
+            pb = self.store.dispatch_get(uniq[miss], with_values=True,
+                                         trace=dsp)
+            self._ct.end_span(dsp, stage="dispatch")
             self._st_dispatch.end(t0)
             t0 = self._st_resolve.begin()
+            vsp = self._ct.begin_span("value_fetch", bt)
             f, v = self.store.resolve_get(pb)
+            self._ct.end_span(vsp, stage="value_fetch")
             self._st_resolve.end(t0)
+            self._ct.end_span(csp, stage="device_compute")
             self._st_compute.end(tc)
             found[miss] = f
             vals[miss] = v
@@ -236,6 +258,7 @@ class BourbonServer:
         for req, idx in zip(batch.requests, batch.scatter):
             req.found = found[idx]
             req.result = vals[idx]
+        self._ct.end_span(bt)
 
     def _charge_read_clocks(self, owners_probed: np.ndarray) -> None:
         """Charge read service time to the owning shards' virtual clocks
@@ -255,12 +278,20 @@ class BourbonServer:
 
     # ---------------------------------------------------------------- writes
     def _apply_writes(self, batch: Batch) -> None:
+        bt = self._ct.join_batch(batch.requests, kind="write")
+        # arm the ambient write span: WAL appends issued while applying
+        # this batch parent under it (ended by the commit group's fsync)
+        self._ct.set_write(bt)
         if batch.op == "put":
             self.store.put_batch(batch.keys, batch.values)
         else:
             self.store.delete_batch(batch.keys)
+        self._ct.set_write(None)
         if self.cache is not None:
             self.cache.invalidate(batch.keys)
+        self._ct.end_span(bt)
+        if bt is not None:
+            self._wal_parent = bt
 
     # ------------------------------------------------------------------- obs
     def _collect_obs(self, reg) -> None:

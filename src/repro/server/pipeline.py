@@ -87,6 +87,11 @@ class _InflightRead:
     # batch's value-log reads running on the I/O pool while later batches
     # begin their own retire (or the next dispatch proceeds)
     fetch: object = None
+    # causal-tracing spans (None when no member request is sampled): the
+    # fan-in batch span, and the open device_compute span that crosses
+    # tick boundaries with the in-flight batch
+    tr_batch: object = None
+    tr_compute: object = None
 
 
 class PipelinedServer(BourbonServer):
@@ -194,10 +199,14 @@ class PipelinedServer(BourbonServer):
             # this tick applied becomes durable under ONE coalesced
             # group-commit sync per shard (a no-op per-append writer makes
             # this free) — the WAL commit contract's sync point
+            wsp = self._ct.begin_span("wal_sync", self._wal_parent)
             self.store.wal_sync()
+            self._ct.end_span(wsp)
+            self._wal_parent = None
         for r in done:
             r.completed_tick = self.ticks
             r.done = True
+            self._ct.complete(r.trace, tick=self.ticks)
         self.completed += len(done)
         self._tr.end_tick(tick_no)
         self.ticks += 1
@@ -218,6 +227,7 @@ class PipelinedServer(BourbonServer):
         non-blocking.  Returns completed requests only when the cache
         answered the whole batch (no store work to wait on)."""
         uniq = batch.keys
+        bt = self._ct.join_batch(batch.requests)
         vals = np.zeros((uniq.shape[0], self._value_size), np.uint8)
         found = np.zeros(uniq.shape[0], bool)
         if self.cache is not None:
@@ -231,9 +241,13 @@ class PipelinedServer(BourbonServer):
         miss = ~hit
         if not miss.any():
             self.cache_only_batches += 1
+            self._ct.end_span(bt)
             return self._scatter(batch, found, vals, epochs=None)
         t0 = self._st_dispatch.begin()
-        pb = self.store.dispatch_get(uniq[miss], with_values=True)
+        dsp = self._ct.begin_span("dispatch", bt)
+        pb = self.store.dispatch_get(uniq[miss], with_values=True,
+                                     trace=dsp)
+        self._ct.end_span(dsp, stage="dispatch")
         self._st_dispatch.end(t0)
         completed: list[ServerRequest] = []
         if (self._inflight
@@ -246,7 +260,10 @@ class PipelinedServer(BourbonServer):
             completed = self._drain()
         self._inflight.append(_InflightRead(batch, found, vals, miss, pb,
                                             self.ticks,
-                                            self._st_compute.begin()))
+                                            self._st_compute.begin(),
+                                            tr_batch=bt,
+                                            tr_compute=self._ct.begin_span(
+                                                "device_compute", bt)))
         self.batches_dispatched += 1
         self.max_depth_seen = max(self.max_depth_seen, len(self._inflight))
         return completed
@@ -269,12 +286,18 @@ class PipelinedServer(BourbonServer):
         # had before the host blocked on this batch (crosses ticks; the
         # handle no-ops when the dispatch tick was unsampled)
         self._st_compute.end(fl.t_dispatch)
+        self._ct.end_span(fl.tr_compute, stage="device_compute")
         return fl
 
     def _finish_retire(self, fl: _InflightRead) -> list[ServerRequest]:
         """Blocking second half: join the value fetch and fan the results
         back out."""
+        # the exposed join: flow-linked from the io_task span that ran
+        # the blocking half on the pool (fan-in back onto the tick loop)
+        vsp = self._ct.begin_span("value_fetch", fl.tr_batch,
+                                  link=fl.fetch.span)
         f, v = fl.fetch.wait()
+        self._ct.end_span(vsp, stage="value_fetch")
         fl.found[fl.miss] = f
         fl.vals[fl.miss] = v
         self.store_probe_keys += int(fl.miss.sum())
@@ -285,6 +308,7 @@ class PipelinedServer(BourbonServer):
         self._fill_cache(fl.batch.keys[pos], fl.vals[pos],
                          fl.pending.epochs)
         self.batches_retired += 1
+        self._ct.end_span(fl.tr_batch)
         return self._scatter(fl.batch, fl.found, fl.vals,
                              epochs=fl.pending.epochs)
 
@@ -332,10 +356,12 @@ class PipelinedServer(BourbonServer):
                >= self.cfg.bubble_every_ticks)
         if not due:
             return
+        msp = self._ct.begin_maintenance(self.ticks, kind="bubble")
         for sh in self.store.shards:
             sh._tick()
         if self.coordinator is not None:
             self.coordinator.tick()
+        self._ct.end_maintenance(msp)
         self._last_bubble = self.ticks
         self.bubbles += 1
 

@@ -113,9 +113,20 @@ class StorageEngine:
         self.wal = self._new_wal(wal_path(dirpath, self.wal_no))
 
     def _new_wal(self, path: str):
-        if self.group_commit:
-            return GroupCommitWAL(path, self.fsync)
-        return WALWriter(path, self.fsync)
+        w = (GroupCommitWAL(path, self.fsync) if self.group_commit
+             else WALWriter(path, self.fsync))
+        # carry the causal tracer across rotation: a traced write must be
+        # able to land in whichever writer is current
+        ct = getattr(self, "_tracer", None)
+        if ct is not None:
+            w.tracer = ct
+        return w
+
+    def set_tracer(self, ct) -> None:
+        """Wire the causal tracer (repro.obs.trace) into the WAL writer —
+        and every writer a future rotation creates."""
+        self._tracer = ct
+        self.wal.tracer = ct
 
     def ensure_format(self, value_size: int, seg_slots: int,
                       plr_delta: int) -> None:

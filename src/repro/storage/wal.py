@@ -26,8 +26,11 @@ from __future__ import annotations
 import os
 import struct
 import threading
+import time
 
 import numpy as np
+
+from repro.obs import NULL_CTRACE
 
 from .format import fsync_dir, read_frames, write_frame
 
@@ -52,6 +55,10 @@ class WALWriter:
         self.appends = 0
         self.fsyncs = 0
         self.commits = 0     # disk syncs (flush groups); == appends here
+        # causal tracer (repro.obs.trace): set by the engine when the
+        # store attaches an obs plane; one attribute read per append
+        # while no traced write is in flight
+        self.tracer = NULL_CTRACE
         created = not os.path.exists(path)
         self._f = open(path, "ab")
         if fsync and created:
@@ -59,6 +66,8 @@ class WALWriter:
 
     def append(self, keys: np.ndarray, seqs: np.ndarray,
                vptrs: np.ndarray) -> None:
+        # per-append durability: the append span covers its own commit
+        tsp = self.tracer.wal_append()
         write_frame(self._f, _pack_frame(keys, seqs, vptrs))
         self._f.flush()
         if self.fsync:
@@ -66,6 +75,7 @@ class WALWriter:
             self.fsyncs += 1
         self.appends += 1
         self.commits += 1
+        self.tracer.end_span(tsp, stage="wal_fsync")
 
     def sync(self) -> None:
         """Per-append durability means there is nothing left to wait for
@@ -112,12 +122,19 @@ class GroupCommitWAL:
         self.appends = 0
         self.fsyncs = 0
         self.commits = 0                  # commit groups written
+        # causal tracer (repro.obs.trace): set by the engine at obs
+        # attach; wal_append() is one attribute read when untraced
+        self.tracer = NULL_CTRACE
         created = not os.path.exists(path)
         self._f = open(path, "ab")
         if fsync and created:
             fsync_dir(os.path.dirname(path))
         self._cv = threading.Condition()
         self._pending: list[bytes] = []
+        # wal_append spans of the frames in _pending (traced writes only;
+        # drained with the batch so each commit group ends exactly the
+        # appends it made durable)
+        self._trace_appends: list = []
         self._enqueued = 0
         self._durable = 0
         self._sync_upto = 0               # highest sync barrier requested
@@ -134,12 +151,15 @@ class GroupCommitWAL:
     def append(self, keys: np.ndarray, seqs: np.ndarray,
                vptrs: np.ndarray) -> None:
         payload = _pack_frame(keys, seqs, vptrs)
+        tsp = self.tracer.wal_append()    # enqueue->durable span, or None
         with self._cv:
             if self._exc is not None:
                 raise self._exc
             if self._closing:
                 raise RuntimeError("append on a closed GroupCommitWAL")
             self._pending.append(payload)
+            if tsp is not None:
+                self._trace_appends.append(tsp)
             self._enqueued += 1
             self.appends += 1
             self._cv.notify_all()
@@ -176,6 +196,9 @@ class GroupCommitWAL:
                     return
                 batch = self._pending
                 self._pending = []
+                tspans = self._trace_appends
+                self._trace_appends = []
+            t_commit = time.perf_counter()
             try:
                 for payload in batch:
                     write_frame(self._f, payload)
@@ -187,6 +210,11 @@ class GroupCommitWAL:
                     self._exc = exc
                     self._cv.notify_all()
                 return
+            if tspans:
+                # fan-in: M appends -> one commit group.  Ends each append
+                # span at durability (crediting wal_fsync) BEFORE _durable
+                # moves, so a sync()ing producer reads quiesced segments
+                self.tracer.wal_commit(tspans, t_commit)
             with self._cv:
                 self._durable += len(batch)
                 self.commits += 1
@@ -229,6 +257,7 @@ class GroupCommitWAL:
         with self._cv:
             self._crashed = True
             self._pending = []
+            self._trace_appends = []
             self._cv.notify_all()
         self._thread.join()
         if not self._f.closed:

@@ -278,6 +278,8 @@ OBSDRIFT_POS = """
         reg.gauge("store_depth", region="eu")   # unknown label
         tr.stage("admissionz")               # not a READ_STAGE
         publish_stats(reg, "svr", {})        # undeclared prefix
+        sp = tr.begin_span("walsync", bt)    # not a SPAN_NAME
+        tr.end_span(sp, stage="fsync")       # not a CRITICAL_STAGE
 """
 
 OBSDRIFT_NEG = """
@@ -291,6 +293,9 @@ OBSDRIFT_NEG = """
         publish_stats(reg, "fleet", {})
         name = compute_name()
         reg.gauge(name)                      # dynamic: skipped
+        sp = tr.begin_span("wal_sync", bt, link=bt, shard=0)
+        tr.end_span(sp, stage="wal_fsync", retrack=True)
+        tr.end_span(tr.begin_span(name, bt))    # dynamic name: skipped
 """
 
 
@@ -308,6 +313,8 @@ def test_obsdrift_fires(tmp_path):
     assert any("label 'region'" in m for m in msgs)
     assert any("READ_STAGES" in m for m in msgs)
     assert any("publish_stats prefix" in m for m in msgs)
+    assert any("SPAN_NAMES" in m for m in msgs)
+    assert any("CRITICAL_STAGES" in m for m in msgs)
 
 
 def test_obsdrift_quiet(tmp_path):
@@ -320,6 +327,11 @@ def test_obsdrift_reads_live_declarations():
     assert "value_fetch" in rule.stages       # parsed from obs/__init__.py
     assert "fleet" in rule.prefixes           # parsed from obs/README.md
     assert "index" in rule.labels
+    assert "shard_probe" in rule.spans        # parsed from obs/trace.py
+    assert "wal_fsync" in rule.critical
+    # code and README causal-tracing tables agree (drift would be
+    # reported as findings against trace.py)
+    assert rule._trace_drift == []
 
 
 # ------------------------------------------------------------- suppressions

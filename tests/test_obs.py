@@ -109,6 +109,60 @@ def test_counter_observe_total_restart_detection():
     assert c.value == 31
 
 
+def test_delta_counter_rates_and_restart_detection():
+    """``MetricsRegistry.delta``: counters report cur-prev per window,
+    with the same restart rule as ``observe_total`` — a current value
+    below the previous one means the source restarted, so the whole
+    current value is the window's progress."""
+    reg = MetricsRegistry()
+    c = reg.counter("server_gets_total", shard="0")
+    g = reg.gauge("server_queued")
+    c.inc(10)
+    g.set(7)
+    prev = reg.snapshot()
+    c.inc(5)
+    g.set(3)
+    d = reg.delta(prev)
+    assert _sample(d, "server_gets_total", shard="0") == 5
+    assert _sample(d, "server_queued") == 3          # gauges: current
+    # restart: simulate by replacing the counter's cumulative value
+    prev2 = reg.snapshot()
+    c.value = 2.0                                    # restarted source
+    d2 = reg.delta(prev2)
+    assert _sample(d2, "server_gets_total", shard="0") == 2
+    # a sample new in cur counts from zero; prev-only samples are omitted
+    reg.counter("server_puts_total").inc(4)
+    d3 = reg.delta(prev2)
+    assert _sample(d3, "server_puts_total") == 4
+    assert all(n in reg.snapshot() for n in d3)
+
+
+def test_delta_histogram_bucket_deltas_and_restart():
+    reg = MetricsRegistry()
+    h = reg.histogram("server_stage_us", stage="dispatch")
+    h.observe(3.0)
+    h.observe(100.0)
+    prev = reg.snapshot()
+    h.observe(100.0)
+    d = reg.delta(prev)
+    v = _sample(d, "server_stage_us", stage="dispatch")
+    assert v["count"] == 1 and v["sum"] == 100.0
+    assert sum(v["buckets"]) == 1                    # one new observation
+    assert v["max"] == 100.0                         # current max, not rate
+    assert "exemplars" not in v                      # not a rate: dropped
+    # histogram restart rule keys on count going backwards
+    h2 = reg.histogram("server_stage_us", stage="dispatch")
+    assert h2 is h
+    prev2 = reg.snapshot()
+    h.count = 1
+    h.sum = 50.0
+    h.buckets = [0] * len(h.buckets)
+    h.buckets[0] = 1
+    d2 = reg.delta(prev2)
+    v2 = _sample(d2, "server_stage_us", stage="dispatch")
+    assert v2["count"] == 1 and v2["sum"] == 50.0    # whole cur is fresh
+
+
 def test_collector_keyed_replacement():
     reg = MetricsRegistry()
     reg.register_collector("src", lambda r: r.counter("a").observe_total(5))
