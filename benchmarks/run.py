@@ -18,6 +18,10 @@ SUITES = {
     "fig12": ("bench_range", "range queries"),
     "fig13": ("bench_mixed", "mixed writes: cba vs always vs offline + table1"),
     "fig14": ("bench_ycsb", "YCSB A-F"),
+    "ycsb": ("bench_ycsb",
+             "filter plane: zipf lookups at 0/25/50/75% miss ratios, "
+             "filters on vs off (probe counts + FPR in the artifact)",
+             "run_miss"),
     "fig15": ("bench_sosd", "SOSD datasets"),
     "fig17": ("bench_error_bound", "delta sweep + space overheads"),
     "table2": ("bench_storage", "fast-storage + limited-memory tier model"),

@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""CI gate: the filter plane must never change a single result bit.
+
+A bloom false positive costs wasted probes; a false *negative* is data
+loss — a present key reported absent because a filter screened it or the
+level maybe-mask pruned the level holding it.  This script runs one
+fixed mixed GET workload (present keys, guaranteed-absent keys, deleted
+keys whose tombstones must still pass their filter, and batches both
+under and over ``host_answer_max`` so the host-answer path and the
+device maybe-mask path are each exercised) through two identically
+loaded stores — filters on vs off — and fails unless every request's
+found/value arrays are byte-identical.  The filters-on durable store is
+then reopened from the MANIFEST so the recovered-filter path is held to
+the same bar.
+
+Exit status 0 = identical; 1 = any divergence (printed per request).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import LSMConfig, StoreConfig  # noqa: E402
+from repro.core.filters import FilterConfig  # noqa: E402
+from repro.core.store import BourbonStore  # noqa: E402
+
+N_KEYS = 1 << 12
+ROUNDS = 8
+
+
+def _cfg(enabled: bool) -> StoreConfig:
+    return StoreConfig(mode="bourbon", policy="cba",
+                       filters=FilterConfig(enabled=enabled),
+                       lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                                     l1_cap_records=1 << 13))
+
+
+def _load(st: BourbonStore, keys: np.ndarray, dead: np.ndarray) -> None:
+    for off in range(0, keys.shape[0], 1 << 11):
+        st.put_batch(keys[off: off + (1 << 11)])
+    st.delete_batch(dead)                 # tombstones must pass filters
+    st.flush_all()
+    st.learn_all()
+
+
+def _requests(keys: np.ndarray, dead: np.ndarray) -> list[np.ndarray]:
+    """Fixed probe batches: mixed present/absent/deleted at sizes that
+    route through the host-answer path (small) and the padded device
+    dispatch with the per-level maybe-mask (large)."""
+    rng = np.random.default_rng(11)
+    absent = keys + 1                     # odd gap keys: never inserted
+    reqs = []
+    for r in range(ROUNDS):
+        size = 64 if r % 2 == 0 else 512  # straddle host_answer_max
+        parts = [rng.choice(keys, size // 2),
+                 rng.choice(absent, size // 4),
+                 rng.choice(dead, size // 4)]
+        reqs.append(np.concatenate(parts).astype(np.int64))
+    reqs.append(absent[:512].copy())      # pure existence-check sweep
+    reqs.append(keys[:512].copy())        # pure hit sweep
+    return reqs
+
+
+def _run(st: BourbonStore, reqs: list[np.ndarray]) -> list[tuple]:
+    out = []
+    for ks in reqs:
+        found, vals = st.get_batch(ks)
+        out.append((np.asarray(found).tobytes(),
+                    np.asarray(vals).tobytes()))
+    return out
+
+
+def _diff(tag: str, ref: list[tuple], got: list[tuple]) -> bool:
+    ok = True
+    for i, ((f0, v0), (f1, v1)) in enumerate(zip(ref, got)):
+        if f0 != f1:
+            print(f"FAIL: {tag} found-mask diverges at request {i} "
+                  f"(a screened or pruned key was present: false negative)")
+            ok = False
+        elif v0 != v1:
+            print(f"FAIL: {tag} values diverge at request {i}")
+            ok = False
+    return ok
+
+
+def main() -> int:
+    rng = np.random.default_rng(3)
+    keys = rng.permutation(np.arange(1, N_KEYS + 1, dtype=np.int64) * 4)
+    dead = keys[:: 16].copy()             # every 16th key deleted again
+    reqs = _requests(keys, dead)
+
+    off = BourbonStore(_cfg(enabled=False))
+    _load(off, keys, dead)
+    ref = _run(off, reqs)
+    off.close()
+
+    d = tempfile.mkdtemp(prefix="bourbon_zerofn_")
+    try:
+        on = BourbonStore.open(os.path.join(d, "db"), _cfg(enabled=True))
+        _load(on, keys, dead)
+        got = _run(on, reqs)
+        screened = on.filter_screened
+        on.close()
+        if not _diff("filters-on", ref, got):
+            return 1
+        if screened == 0:
+            print("FAIL: filters-on arm screened nothing — the gate "
+                  "did not exercise the filter plane")
+            return 1
+        print(f"filters-on: {len(reqs)} requests byte-identical, "
+              f"{screened} keys screened pre-dispatch")
+
+        # reopen: recovered filters (MANIFEST record + .bf sidecars) must
+        # serve the same answers with zero rebuilds
+        re = BourbonStore.open(os.path.join(d, "db"), _cfg(enabled=True))
+        built = re.filters_built
+        got2 = _run(re, reqs)
+        re.close()
+        if built != 0:
+            print(f"FAIL: reopen rebuilt {built} filters (expected 0: "
+                  f"recovered from MANIFEST)")
+            return 1
+        if not _diff("filters-on-reopened", ref, got2):
+            return 1
+        print(f"filters-on reopened: {len(reqs)} requests byte-identical, "
+              f"0 filters rebuilt")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    print(f"OK: filter plane zero-false-negative across "
+          f"{sum(r.shape[0] for r in reqs)} probes")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import LSMConfig, StoreConfig  # noqa: E402
 from repro.core.engine import EngineConfig  # noqa: E402
+from repro.core.filters import FilterConfig  # noqa: E402
 from repro.distributed import ShardedConfig, ShardedStore  # noqa: E402
 from repro.server import (PipelineConfig, PipelinedServer,  # noqa: E402
                           ServerRequest)
@@ -44,8 +45,12 @@ POOL_SIZES = (0, 1, 4)
 def _open_store(path: str, keys: np.ndarray) -> ShardedStore:
     bounds = tuple(int(b) for b in
                    np.quantile(keys, np.arange(1, N_SHARDS) / N_SHARDS))
+    # filters explicitly on: the screen/host-answer paths must stay
+    # deterministic under the threaded resolve too (the +1 miss keys in
+    # the streams exercise them)
     cfg = StoreConfig(granularity="level", policy="always", value_size=16,
                       vlog_seg_slots=1 << 9, wal_group_commit=True,
+                      filters=FilterConfig(enabled=True),
                       lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
                                     l1_cap_records=1 << 13),
                       engine=EngineConfig(seg_cap=4096))

@@ -19,8 +19,8 @@ import sys
 
 # canonical stage set, kept in lockstep with repro.obs.READ_STAGES (the
 # script must stay runnable without PYTHONPATH=src, so no import)
-STAGES = ("admission", "coalesce", "cache_probe", "dispatch", "compute",
-          "resolve", "value_fetch")
+STAGES = ("admission", "coalesce", "cache_probe", "filter_probe", "dispatch",
+          "compute", "resolve", "value_fetch")
 
 
 def main() -> int:

@@ -56,6 +56,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run serve
 
+# filter plane: zipf lookups at 0/25/50/75% guaranteed-miss ratios,
+# filters on vs off — the miss-heavy arms must show the probe-count
+# reduction and the speedup the plane exists for (diffed against the
+# committed baseline below; the 50% arm carries the >=1.15x target)
+REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run ycsb
+
 # host I/O plane determinism gate: the threaded read path (io_workers 1
 # and 4) and the group-commit WAL committer must produce byte-identical
 # results to the inline path (io_workers=0) with epoch_violations == 0 —
@@ -63,6 +70,14 @@ REPRO_BENCH_SMOKE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # semantics
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python scripts/check_io_determinism.py
+
+# filter plane zero-false-negative gate: filters on vs off must produce
+# byte-identical found/value arrays on a mixed present/absent/deleted
+# workload (both the host-answer path and the device maybe-mask path),
+# and a reopened store must serve recovered filters with zero rebuilds —
+# a bloom false positive costs probes, a false negative is data loss
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/check_filter_zero_fn.py
 
 # observability overhead gate: serve bench with tracing enabled (on the
 # threaded pipelined server — the I/O-pool path is traced too) must stay

@@ -34,6 +34,7 @@ from .core import Finding, Rule, SourceFile, dotted, match_hot
 # tracer handles, cache probe/fill.
 DEFAULT_HOT_FUNCTIONS = (
     ("LookupEngine", "lookup_async"),
+    ("LookupEngine", "filter_probe"),
     ("*", "dispatch_*"),
     ("*", "resolve_*"),
     ("*Server", "tick"),
@@ -54,12 +55,13 @@ DEFAULT_HOT_FUNCTIONS = (
 # calls whose result lives on device
 DEFAULT_DEVICE_PRODUCERS = (
     "lookup_async", "device_view", "device_state", "_dist_dispatch",
-    "device_put",
+    "device_put", "filter_probe",
 )
 
 # attribute names that hold device arrays in this codebase
 DEFAULT_DEVICE_ATTRS = (
-    "f_dev", "v_dev", "probe_split_acc", "_pos_dev", "_neg_dev",
+    "f_dev", "v_dev", "probe_split_acc", "filter_stats_acc",
+    "_pos_dev", "_neg_dev",
 )
 
 # transfer sinks gated on taint (jnp.asarray is host->device, not here)

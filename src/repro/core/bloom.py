@@ -14,7 +14,9 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-__all__ = ["bloom_build_np", "bloom_probe_ref", "bloom_words", "DEFAULT_BITS_PER_KEY"]
+__all__ = ["bloom_build_np", "bloom_probe_np", "bloom_probe_hashed_np",
+           "bloom_probe_ref",
+           "bloom_words", "DEFAULT_BITS_PER_KEY"]
 
 DEFAULT_BITS_PER_KEY = 10
 _MIX1 = np.uint64(0x9E3779B97F4A7C15)
@@ -48,6 +50,31 @@ def bloom_build_np(keys: np.ndarray, n_words: int, k_hashes: int = 7) -> np.ndar
         np.bitwise_or.at(bits, (pos >> np.uint64(6)).astype(np.int64),
                          np.uint64(1) << (pos & np.uint64(63)))
     return bits
+
+
+def bloom_probe_np(bits: np.ndarray, probes: np.ndarray, k_hashes: int = 7,
+                   n_words: int | None = None) -> np.ndarray:
+    """Host-side numpy probe of one (W,) filter — the store's pre-dispatch
+    screen (no device work, no transfers).  Same math as bloom_probe_ref."""
+    h1, h2 = _hash2_np(probes)
+    return bloom_probe_hashed_np(bits, h1, h2, k_hashes, n_words)
+
+
+def bloom_probe_hashed_np(bits: np.ndarray, h1: np.ndarray, h2: np.ndarray,
+                          k_hashes: int = 7,
+                          n_words: int | None = None) -> np.ndarray:
+    """Probe with pre-mixed hashes: the double-hash bases are filter-
+    independent, so a multi-level screen mixes the batch once and probes
+    every level's filter with the same (h1, h2)."""
+    if n_words is None:
+        n_words = bits.shape[0]
+    m = np.uint64(int(n_words) * 64)
+    maybe = np.ones(h1.shape, bool)
+    for i in range(k_hashes):
+        pos = (h1 + np.uint64(i) * h2) % m
+        word = bits[(pos >> np.uint64(6)).astype(np.int64)]
+        maybe &= ((word >> (pos & np.uint64(63))) & np.uint64(1)).astype(bool)
+    return maybe
 
 
 def bloom_probe_ref(bits: jnp.ndarray, probes: jnp.ndarray, k_hashes: int = 7,

@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import math
 
 from .clock import CostModel
 from .lsm import LSMTree
@@ -186,6 +187,11 @@ class MaintenanceScheduler(CostBenefitAnalyzer):
         self.checkpoints = 0
         self.checkpoint_us = 0.0
         self.checkpoint_overruns = 0  # folds too big for any tick budget
+        # filter plane (per-level bloom filters ahead of the descent):
+        # sizing decisions + build time, charged like learning jobs
+        self.filter_decisions = {"bootstrap": 0, "sized": 0, "rebuilt": 0}
+        self.filter_builds = 0
+        self.filter_us = 0.0
 
     def gc_t_wait(self, seg_slots: int) -> float:
         if self.mcfg.gc_t_wait_us is not None:
@@ -282,6 +288,38 @@ class MaintenanceScheduler(CostBenefitAnalyzer):
     def should_checkpoint(self, manifest_bytes: int) -> bool:
         return (self.mcfg.auto_checkpoint
                 and manifest_bytes > self.mcfg.checkpoint_bytes)
+
+    # ------------------------------------------------------------ filters
+    @staticmethod
+    def filter_fpr(bits_per_key: int, k_hashes: int) -> float:
+        """Expected bloom false-positive rate at the configured hash count
+        (not the optimal-k approximation — k is fixed by the engine)."""
+        return (1.0 - math.exp(-k_hashes / bits_per_key)) ** k_hashes
+
+    def filter_bits_per_key(self, level: int, n_keys: int, base: int,
+                            lo: int, hi: int, k_hashes: int) -> int:
+        """CBA sizing for one level filter (§4.4 framing): per candidate
+        bits-per-key, cost = expected false-positive probes over the
+        level's observed miss traffic (each one a wasted model probe,
+        t_nm) + memory rent on the held bits; pick the cheapest.  Without
+        enough completed-file stats the base size is used (bootstrap, like
+        always-learn)."""
+        st = self.level_stats.get(level)
+        if st is None or st.n_files < self.cfg.min_stat_files:
+            self.filter_decisions["bootstrap"] += 1
+            return base
+        # miss traffic seen by a level of this size, scaled the same way
+        # benefit() scales per-file stats (factor f = s / s_bar_l)
+        n_neg = st.avg_neg * (n_keys / max(st.avg_size, 1.0))
+        c = self.costs
+        best, best_cost = base, float("inf")
+        for bpk in range(lo, hi + 1):
+            cost = (n_neg * self.filter_fpr(bpk, k_hashes) * c.t_nm
+                    + n_keys * bpk * c.filter_mem_per_bit)
+            if cost < best_cost:
+                best, best_cost = bpk, cost
+        self.filter_decisions["sized"] += 1
+        return best
 
 
 @dataclasses.dataclass(order=True)

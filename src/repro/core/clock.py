@@ -43,9 +43,18 @@ class CostModel:
     gc_move_per_entry: float = 2.0    # relocate one live entry (us)
     gc_benefit_per_dead_byte: float = 0.1   # avoided amplification (us/B)
     checkpoint_per_byte: float = 0.001  # MANIFEST rewrite cost (us/B)
+    # filter-plane terms: building hashes each key k times (cheaper than a
+    # PLR fit), and every held filter bit charges an amortized memory rent
+    # — the terms the CBA sizing trades against false-positive probe cost
+    filter_build_per_key: float = 0.05   # bloom build per key (us)
+    filter_mem_per_bit: float = 0.0002   # amortized rent per filter bit (us)
 
     def t_build(self, n_keys: int) -> float:
         return self.learn_per_key * n_keys
+
+    def t_filter_build(self, n_keys: int) -> float:
+        """Virtual cost of building one level filter."""
+        return self.filter_build_per_key * n_keys
 
     def t_gc(self, n_entries: int, n_live: int) -> float:
         """Virtual cost of collecting one segment (scan + relocation)."""

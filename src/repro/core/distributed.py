@@ -54,13 +54,16 @@ class DistStoreConfig:
 
 
 def _stack_shards(chunks, delta: int, cap: int | None,
-                  seg_cap: int | None, models=None):
+                  seg_cap: int | None, models=None, filters=None):
     """Stack per-shard sorted (keys, vptrs) snapshots into the device-state
     dict, fitting one PLR model per shard.  ``cap``/``seg_cap`` default to
     the live maxima (padded to a power of two) so disk-recovered shards of
     any size fit; passing them pins the legacy fixed geometry.  ``models``
     supplies pre-fit per-shard PLR models (must use the same ``delta``) so
-    a caller refreshing one shard need not refit the rest."""
+    a caller refreshing one shard need not refit the rest.  ``filters``
+    (per-shard LevelFilter or None) adds stacked bloom rows ``fbits``
+    (S, W) / ``fnw`` (S,) to the state so the GET kernel can prune shards
+    that definitely lack a probe; ``fnw == 0`` marks no-filter rows."""
     n_shards = len(chunks)
     if models is None:
         models = [greedy_plr_np(k, delta=delta) if k.shape[0] else None
@@ -98,9 +101,21 @@ def _stack_shards(chunks, delta: int, cap: int | None,
         slopes[s, :k] = np.asarray(m.slopes)[:k]
         icepts[s, :k] = np.asarray(m.intercepts)[:k]
         nseg[s] = k
-    return {"keys": ks, "vptrs": vs, "n": ns, "lo": lo, "hi": hi,
-            "starts": starts, "slopes": slopes, "icepts": icepts,
-            "nseg": nseg}
+    out = {"keys": ks, "vptrs": vs, "n": ns, "lo": lo, "hi": hi,
+           "starts": starts, "slopes": slopes, "icepts": icepts,
+           "nseg": nseg}
+    if filters is not None:
+        fw = max(64, next_pow2(max(
+            (f.n_words for f in filters if f is not None), default=1)))
+        fbits = np.zeros((n_shards, fw), np.uint64)
+        fnw = np.zeros((n_shards,), np.int32)
+        for s, f in enumerate(filters):
+            if f is not None:
+                fbits[s, : f.n_words] = f.bits
+                fnw[s] = f.n_words
+        out["fbits"] = fbits
+        out["fnw"] = fnw
+    return out
 
 
 def build_dist_state(keys: np.ndarray, vptrs: np.ndarray, n_shards: int,
@@ -115,7 +130,8 @@ def build_dist_state(keys: np.ndarray, vptrs: np.ndarray, n_shards: int,
                          cfg.seg_cap)
 
 
-def build_dist_state_from_shards(snapshots, delta: int = 8, models=None):
+def build_dist_state_from_shards(snapshots, delta: int = 8, models=None,
+                                 filters=None):
     """Device state from per-shard snapshots (the durable-plane entry
     point): ``snapshots`` is a list of (keys, vptrs) pairs, one per range
     partition, each sorted by key with shadowed versions and tombstones
@@ -124,9 +140,11 @@ def build_dist_state_from_shards(snapshots, delta: int = 8, models=None):
     sized to the live maxima, so shards recovered from disk never need a
     global key count up front.  ``models`` optionally carries pre-fit
     per-shard PLR models (same ``delta``), letting an epoch-cached caller
-    refit only the shards whose snapshot actually changed."""
+    refit only the shards whose snapshot actually changed.  ``filters``
+    optionally carries per-shard bloom filters (see ``_stack_shards``)."""
     return _stack_shards([(np.asarray(k, np.int64), np.asarray(v, np.int64))
-                          for k, v in snapshots], delta, None, None, models)
+                          for k, v in snapshots], delta, None, None, models,
+                         filters)
 
 
 def dist_state_specs(mesh, cfg: DistStoreConfig):
@@ -151,13 +169,18 @@ def dist_state_specs(mesh, cfg: DistStoreConfig):
     }
 
 
-def dist_get_local(shard, probes, delta: int, seg_search: str = "bisect"):
+def dist_get_local(shard, probes, delta: int, seg_search: str = "bisect",
+                   maybe=None, k_hashes: int = 7):
     """One shard's answers for the full probe batch (masked outside its
     range).  shard leaves have a leading length-1 shard dim inside shard_map.
 
     seg_search: "bisect" (log2(S) gather steps; bytes ~ B*8 per step) or
     "compare" (one (B, S) broadcast compare; bytes ~ B*S*8 — memory-bound at
-    large B; kept for the perf log)."""
+    large B; kept for the perf log).
+
+    Filter pruning: ``maybe`` (a (B,) bool mask the caller probed
+    separately) or, absent that, the shard's own ``fbits``/``fnw`` bloom
+    row probed in-kernel; probes the filter rules out skip the descent."""
     import math
     keys = shard["keys"][0]
     C = keys.shape[0]
@@ -166,6 +189,12 @@ def dist_get_local(shard, probes, delta: int, seg_search: str = "bisect"):
     # empty shards out explicitly
     mine = ((shard["n"][0] > 0)
             & (probes >= shard["lo"][0]) & (probes <= shard["hi"][0]))
+    if maybe is None and "fbits" in shard:
+        from repro.kernels.ref import bloom_probe_stack_ref
+        maybe = bloom_probe_stack_ref(shard["fbits"], shard["fnw"],
+                                      probes, k_hashes)[0]
+    if maybe is not None:
+        mine = mine & maybe
     pf = probes.astype(jnp.float64)
     starts = shard["starts"][0]
     if seg_search == "compare":
@@ -205,23 +234,32 @@ def dist_get_local(shard, probes, delta: int, seg_search: str = "bisect"):
 
 
 def build_dist_get(mesh, cfg: DistStoreConfig, seg_search: str = "bisect",
-                   combine: str = "reduce_scatter"):
+                   combine: str = "reduce_scatter",
+                   state_keys: tuple | None = None, k_hashes: int = 7):
     """Returns jit(dist_get)(state, probes) -> (found, vptr).
 
     combine="reduce_scatter": results return only to each probe's origin
     shard (psum_scatter; half the payload of an all-reduce, outputs stay
     sharded).  combine="allreduce": every device gets every result (v1,
     kept for the perf log).  found rides as int8 (each probe has exactly
-    one owner, so the reduced value is 0/1 — no overflow)."""
+    one owner, so the reduced value is 0/1 — no overflow).
+
+    ``state_keys`` pins the state-dict layout (pass the caller's actual
+    ``tuple(state)`` when it carries the optional ``fbits``/``fnw`` filter
+    rows); the default is the filterless nine-leaf legacy layout."""
     ax = tuple(mesh.axis_names)
     state_spec = P(ax)
     probe_spec = P(ax)   # probes arrive sharded by origin device
+    if state_keys is None:
+        state_keys = ("keys", "vptrs", "n", "lo", "hi", "starts", "slopes",
+                      "icepts", "nseg")
 
     def body(shard, probes_local):
         probes = probes_local
         for a in ax:
             probes = jax.lax.all_gather(probes, a, tiled=True)
-        hit, vptr = dist_get_local(shard, probes, cfg.delta, seg_search)
+        hit, vptr = dist_get_local(shard, probes, cfg.delta, seg_search,
+                                   k_hashes=k_hashes)
         found = hit.astype(jnp.int8)
         vsum = jnp.where(hit, vptr, 0)
         if combine == "reduce_scatter":
@@ -237,11 +275,7 @@ def build_dist_get(mesh, cfg: DistStoreConfig, seg_search: str = "bisect",
     out_spec = probe_spec if combine == "reduce_scatter" else P()
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(jax.tree.map(lambda _: state_spec,
-                               {"keys": 0, "vptrs": 0, "n": 0, "lo": 0,
-                                "hi": 0, "starts": 0, "slopes": 0,
-                                "icepts": 0, "nseg": 0}),
-                  probe_spec),
+        in_specs=({k: state_spec for k in state_keys}, probe_spec),
         out_specs=(out_spec, out_spec),
         check_vma=False)
     return jax.jit(fn)

@@ -31,8 +31,8 @@ from .bloom import bloom_probe_ref
 from .lsm import LSMTree, N_LEVELS
 from .sstable import BLOCK_RECORDS
 
-__all__ = ["EngineConfig", "DeviceLevel", "DeviceState", "LookupEngine",
-           "LookupResult", "PendingLookup", "binsearch_rows"]
+__all__ = ["EngineConfig", "DeviceLevel", "DeviceState", "FilterState",
+           "LookupEngine", "LookupResult", "PendingLookup", "binsearch_rows"]
 
 KEY_SENTINEL = np.iinfo(np.int64).max
 
@@ -64,7 +64,13 @@ class DeviceLevel:
     n_files: jnp.ndarray     # () int32
 
     def tree_flatten(self):
-        return dataclasses.astuple(self), None
+        # NOT dataclasses.astuple: astuple deep-copies every leaf, and
+        # flatten runs on every jitted dispatch — the copy dominated the
+        # host-side cost of small-batch lookups
+        return (self.keys, self.vptrs, self.n, self.fences, self.n_blocks,
+                self.bloom, self.bloom_nw, self.min_key, self.max_key,
+                self.starts, self.slopes, self.icepts, self.nseg,
+                self.n_files), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -82,7 +88,8 @@ class LevelModel:
     file_start: jnp.ndarray  # (F,) int64 global index of each file's first key
 
     def tree_flatten(self):
-        return dataclasses.astuple(self), None
+        return (self.starts, self.slopes, self.icepts, self.nseg,
+                self.file_start), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -97,6 +104,23 @@ class DeviceState:
 
     def tree_flatten(self):
         return (self.levels, self.level_models), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FilterState:
+    """The filter plane: per-level bloom filters stacked to a padded (L, W)
+    device array, probed by one batched kernel call ahead of the descent."""
+    bits: jnp.ndarray        # (N_LEVELS, W) uint64, width-padded
+    nw: jnp.ndarray          # (N_LEVELS,) int32 build-time words; 0 = none
+    has: jnp.ndarray         # (N_LEVELS,) bool — nw > 0, precomputed
+
+    def tree_flatten(self):
+        return (self.bits, self.nw, self.has), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -246,6 +270,7 @@ class EngineConfig:
     seg_cap: int = 4096          # max PLR segments per file
     level_seg_cap: int = 65536   # max PLR segments per level model
     fetch_values: bool = False
+    filter_impl: str = "ref"     # filter-plane probe kernel impl (ops._mode)
 
 
 class LookupEngine:
@@ -274,6 +299,12 @@ class LookupEngine:
         self.record_probe_split = False
         self.probe_split_acc = None
         self.probe_acc_materializations = 0   # host syncs of the acc
+        # filter plane: stacked (L, W) device filters, cached by the
+        # per-level filter epochs (same discipline as the lm cache); the
+        # (L, 2) [pruned, false-positive] counters accumulate in-graph
+        self._filter_cache: tuple | None = None
+        self.filter_stats_acc = None
+        self.filter_acc_materializations = 0  # host syncs of the filter acc
 
     # ---------------------------------------------------------------- build
     def _build_level(self, tables, cfg: EngineConfig) -> DeviceLevel:
@@ -372,6 +403,51 @@ class LookupEngine:
             levels.append(self._state_cache[i])
             lms.append(self._lm_cache[i])
         return DeviceState(tuple(levels), tuple(lms))
+
+    def build_filter_state(self, level_filters) -> FilterState:
+        """Stack per-level host filters (core.filters.LevelFilter | None) to
+        one padded (N_LEVELS, W) device array, reused while no filter epoch
+        changed.  A level without a filter gets nw = 0 (probe yields
+        all-True there — never prune without evidence)."""
+        key = []
+        for f in level_filters:
+            if f is None:
+                key.append(None)
+                continue
+            if f.epoch == -1:
+                f.epoch = self._unstamped_epoch
+                self._unstamped_epoch -= 1
+            key.append((f.epoch, f.n_words))
+        sig = tuple(key)
+        if self._filter_cache is not None and self._filter_cache[0] == sig:
+            return self._filter_cache[1]
+        L = len(level_filters)
+        W = max(1, _next_pow2(max((f.n_words for f in level_filters
+                                   if f is not None), default=1)))
+        bits = np.zeros((L, W), np.uint64)
+        nw = np.zeros(L, np.int32)
+        for i, f in enumerate(level_filters):
+            if f is not None:
+                bits[i, : f.n_words] = f.bits
+                nw[i] = f.n_words
+        fs = FilterState(jax.device_put(bits), jax.device_put(nw),
+                         jax.device_put(nw > 0))
+        self._filter_cache = (sig, fs)
+        return fs
+
+    def filter_probe(self, fstate: FilterState, probes: jnp.ndarray):
+        """One batched filter-plane probe for the whole batch: (L, B) bool
+        maybe-mask ahead of the descent (SearchFB hoisted in front of
+        FindFiles).  Dispatches async like the lookup itself."""
+        from repro.kernels.ops import bloom_probe_stack
+        key = ("fprobe", probes.shape[0], fstate.bits.shape,
+               self.cfg.filter_impl)
+        if key not in self._jit_cache:
+            k, impl = self.cfg.bloom_k, self.cfg.filter_impl
+            self._jit_cache[key] = jax.jit(
+                lambda bits, nw, p: bloom_probe_stack(bits, nw, p,
+                                                      k_hashes=k, impl=impl))
+        return self._jit_cache[key](fstate.bits, fstate.nw, probes)
 
     # ---------------------------------------------------------------- probes
     def _probe_file_baseline(self, lv: DeviceLevel, f, probes):
@@ -484,9 +560,12 @@ class LookupEngine:
 
     # ---------------------------------------------------------------- lookup
     def _lookup_impl(self, state: DeviceState, probes, mode: str,
-                     l0_slots: tuple, live_levels: tuple = (True,) * N_LEVELS):
-        # l0_slots / live_levels — static occupancy per jit specialization;
-        # empty levels are skipped entirely (no dead gathers)
+                     l0_slots: tuple, live_levels: tuple = (True,) * N_LEVELS,
+                     fmaybe=None, fhas=None, use_filters: bool = False):
+        # l0_slots / live_levels / use_filters — static per jit
+        # specialization; empty levels are skipped entirely (no dead
+        # gathers).  fmaybe: (N_LEVELS, B) filter-plane maybe-mask; fhas:
+        # (N_LEVELS,) which levels carry a real filter (for FP accounting).
         """mode: 'baseline' | 'model' | 'mixed' | 'level'."""
         self.trace_count += 1   # python side effect: runs only at trace
         B = probes.shape[0]
@@ -494,6 +573,7 @@ class LookupEngine:
         vptr = jnp.full(B, -1, jnp.int64)
         served = jnp.full(B, -1, jnp.int8)
         pos_counts, neg_counts = [], []
+        prn_l, fp_l = [], []     # per-level pruned / false-positive probes
 
         def probe_one(lv, f, probes):
             if mode == "baseline":
@@ -511,9 +591,13 @@ class LookupEngine:
             Fdim = lv.max_key.shape[0]
             pos_c = jnp.zeros(Fdim, jnp.int32)
             neg_c = jnp.zeros(Fdim, jnp.int32)
+            prn = jnp.zeros((), jnp.int64)
+            fpc = jnp.zeros((), jnp.int64)
             if not live_levels[li]:
                 pos_counts.append(pos_c)
                 neg_counts.append(neg_c)
+                prn_l.append(prn)
+                fp_l.append(fpc)
                 continue
             if li == 0:
                 # probe each L0 slot newest-first; unrolled over static slots
@@ -523,8 +607,19 @@ class LookupEngine:
                                 (probes <= lv.max_key[s]) &
                                 (s < lv.n_files))
                     active = ~found & in_range
+                    if use_filters:
+                        # the L0 filter row covers the union of all L0
+                        # tables: a screened key skips every slot's probe
+                        prn = prn + jnp.sum(active & ~fmaybe[0],
+                                            dtype=jnp.int64)
+                        active = active & fmaybe[0]
                     hit, v = probe_one(lv, f, probes)
                     hit = hit & active
+                    if use_filters:
+                        fpc = fpc + jnp.where(
+                            fhas[0],
+                            jnp.sum(active & ~hit, dtype=jnp.int64),
+                            jnp.int64(0))
                     pos_c = pos_c.at[s].add(jnp.sum(hit, dtype=jnp.int32))
                     neg_c = neg_c.at[s].add(
                         jnp.sum(active & ~hit, dtype=jnp.int32))
@@ -537,6 +632,10 @@ class LookupEngine:
                     use_lm = lm.nseg > 0
                     f_cand, valid = self._find_file(lv, probes)
                     active = ~found & valid
+                    if use_filters:
+                        prn = prn + jnp.sum(active & ~fmaybe[li],
+                                            dtype=jnp.int64)
+                        active = active & fmaybe[li]
                     hit_lm, v_lm, f_lm = self._probe_level_via_model(
                         lv, lm, probes)
                     hit_b, v_b = self._probe_file_baseline(lv, f_cand, probes)
@@ -546,9 +645,18 @@ class LookupEngine:
                 else:
                     f_cand, valid = self._find_file(lv, probes)
                     active = ~found & valid
+                    if use_filters:
+                        prn = prn + jnp.sum(active & ~fmaybe[li],
+                                            dtype=jnp.int64)
+                        active = active & fmaybe[li]
                     hit, v = probe_one(lv, f_cand, probes)
                     hit = hit & active
                     fattr = f_cand
+                if use_filters:
+                    fpc = fpc + jnp.where(
+                        fhas[li],
+                        jnp.sum(active & ~hit, dtype=jnp.int64),
+                        jnp.int64(0))
                 pos_c = pos_c + jax.ops.segment_sum(
                     hit.astype(jnp.int32), fattr, num_segments=Fdim)
                 neg_c = neg_c + jax.ops.segment_sum(
@@ -559,6 +667,8 @@ class LookupEngine:
                 found = found | hit
             pos_counts.append(pos_c)
             neg_counts.append(neg_c)
+            prn_l.append(prn)
+            fp_l.append(fpc)
         # per-level model-path vs baseline-path attribution, in-graph so
         # the host never has to materialize the per-file vectors: mirrors
         # BourbonStore._account_lookup's has-model rule per engine mode
@@ -579,8 +689,9 @@ class LookupEngine:
             mps.append(mp)
             bps.append(tot - mp)
         probe_split = jnp.stack([jnp.stack(mps), jnp.stack(bps)], axis=1)
+        filter_stats = jnp.stack([jnp.stack(prn_l), jnp.stack(fp_l)], axis=1)
         return (found, vptr, served, tuple(pos_counts), tuple(neg_counts),
-                probe_split)
+                probe_split, filter_stats)
 
     @staticmethod
     def state_signature(state: DeviceState) -> tuple:
@@ -593,36 +704,73 @@ class LookupEngine:
                      for leaf in jax.tree_util.tree_leaves(state))
 
     def _jitted_lookup(self, state: DeviceState, B: int, mode: str,
-                       l0_live: int | None):
+                       l0_live: int | None, fsig: tuple | None = None,
+                       level_maybe: tuple | None = None):
         l0_cap = int(state.levels[0].max_key.shape[0])
         # bucket the L0 slot count (0 or cap): occupancy changes must not
         # retrigger compilation in mixed read/write workloads
         l0_n = 0 if (l0_live == 0) else l0_cap
         live = tuple(bool(int(lv.n_files) > 0) for lv in state.levels)
-        key = (mode, B, l0_n, live, self.state_signature(state))
+        if level_maybe is not None:
+            # filter-plane hint: a level whose maybe-mask is all-False for
+            # every dispatched key cannot serve any of them (zero false
+            # negatives) — drop it from the traced program entirely, which
+            # is where miss-heavy batches actually save wall-clock
+            live = tuple(a and b for a, b in zip(live, level_maybe))
+            l0_n = l0_n if live[0] else 0
+        key = (mode, B, l0_n, live, fsig, self.state_signature(state))
         if key not in self._jit_cache:
             fn = partial(self._lookup_impl, mode=mode, l0_slots=(l0_n,),
                          live_levels=live)
-            self._jit_cache[key] = jax.jit(
-                lambda st, p: fn(st, p))
+            if fsig is None:
+                self._jit_cache[key] = jax.jit(
+                    lambda st, p: fn(st, p))
+            else:
+                self._jit_cache[key] = jax.jit(
+                    lambda st, p, fm, fh: fn(st, p, fmaybe=fm, fhas=fh,
+                                             use_filters=True))
         return self._jit_cache[key]
 
     def lookup_async(self, state: DeviceState, probes: np.ndarray, mode: str,
-                     vlog=None, l0_live: int | None = None) -> PendingLookup:
+                     vlog=None, l0_live: int | None = None,
+                     fstate: FilterState | None = None,
+                     fmaybe_host: np.ndarray | None = None,
+                     level_maybe: tuple | None = None) -> PendingLookup:
         """Dispatch half of the lookup: launches the device program and
         returns immediately with device-array futures (JAX async
         dispatch).  The host is free to admit/coalesce the next batch
-        while this one computes; `PendingLookup.resolve()` blocks."""
+        while this one computes; `PendingLookup.resolve()` blocks.
+
+        With ``fstate`` the filter plane runs first: one batched probe of
+        the stacked per-level filters, whose (L, B) maybe-mask prunes the
+        levels the descent visits per key (still a single async dispatch
+        chain — no host sync).  A caller that already hashed the batch
+        host-side (the store's pre-dispatch screen) passes the mask as
+        ``fmaybe_host`` so the device doesn't probe the same keys twice."""
         B = probes.shape[0]
-        fn = self._jitted_lookup(state, B, mode, l0_live)
-        found, vptr, served, pos_c, neg_c, probe_split = fn(
-            state, jnp.asarray(probes, jnp.int64))
+        p_dev = jnp.asarray(probes, jnp.int64)
+        if fstate is None:
+            fn = self._jitted_lookup(state, B, mode, l0_live)
+            (found, vptr, served, pos_c, neg_c, probe_split,
+             filter_stats) = fn(state, p_dev)
+        else:
+            fmaybe = (jnp.asarray(fmaybe_host) if fmaybe_host is not None
+                      else self.filter_probe(fstate, p_dev))
+            fsig = (tuple(fstate.bits.shape), self.cfg.filter_impl)
+            fn = self._jitted_lookup(state, B, mode, l0_live, fsig,
+                                     level_maybe)
+            (found, vptr, served, pos_c, neg_c, probe_split,
+             filter_stats) = fn(state, p_dev, fmaybe, fstate.has)
         if self.record_probe_split:
-            # one async device-side add per batch; the running total is
-            # synced to the host only when probe_split_np() is called
+            # one async device-side add per batch; the running totals are
+            # synced to the host only when *_np() is called
             self.probe_split_acc = (
                 probe_split if self.probe_split_acc is None
                 else self.probe_split_acc + probe_split)
+            if fstate is not None:
+                self.filter_stats_acc = (
+                    filter_stats if self.filter_stats_acc is None
+                    else self.filter_stats_acc + filter_stats)
         values = None
         if self.cfg.fetch_values and vlog is not None:
             dv = vlog.device_view()
@@ -631,8 +779,10 @@ class LookupEngine:
         return PendingLookup(found, vptr, served, pos_c, neg_c, values)
 
     def lookup(self, state: DeviceState, probes: np.ndarray, mode: str,
-               vlog=None, l0_live: int | None = None) -> LookupResult:
-        return self.lookup_async(state, probes, mode, vlog, l0_live).resolve()
+               vlog=None, l0_live: int | None = None,
+               fstate: FilterState | None = None) -> LookupResult:
+        return self.lookup_async(state, probes, mode, vlog, l0_live,
+                                 fstate).resolve()
 
     def probe_split_np(self) -> np.ndarray:
         """Materialize the accumulated per-level (model, baseline) probe
@@ -643,3 +793,13 @@ class LookupEngine:
             return np.zeros((N_LEVELS, 2), np.int64)
         self.probe_acc_materializations += 1
         return np.asarray(self.probe_split_acc)
+
+    def filter_stats_np(self) -> np.ndarray:
+        """Materialize the accumulated per-level (pruned, false-positive)
+        filter-plane counts — same one-sync snapshot-only discipline as
+        probe_split_np (own counter, so probe-split sync assertions stay
+        exact)."""
+        if self.filter_stats_acc is None:
+            return np.zeros((N_LEVELS, 2), np.int64)
+        self.filter_acc_materializations += 1
+        return np.asarray(self.filter_stats_acc)

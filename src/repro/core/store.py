@@ -29,6 +29,7 @@ from .cba import (CBAConfig, LearningExecutor, MaintenanceConfig,
                   MaintenanceScheduler)
 from .clock import CostModel, VirtualClock
 from .engine import EngineConfig, LookupEngine, LookupResult, PendingLookup
+from .filters import FilterConfig, build_level_filter, filter_maybe_np
 from .lsm import LSMConfig, LSMTree, N_LEVELS
 from .memtable import MemTable
 from .valuelog import ValueLog
@@ -57,6 +58,7 @@ class StoreConfig:
     costs: CostModel = dataclasses.field(default_factory=CostModel)
     maintenance: MaintenanceConfig = dataclasses.field(
         default_factory=MaintenanceConfig)
+    filters: FilterConfig = dataclasses.field(default_factory=FilterConfig)
     value_size: int = 64
     fetch_values: bool = False
     # durability (repro.storage): None = in-memory store (seed behavior)
@@ -74,6 +76,18 @@ class StoreConfig:
         self.engine.bloom_k = self.lsm.bloom_k
         self.engine.fetch_values = self.fetch_values
         self.cba.policy = self.policy
+
+
+class _HostLookupRes:
+    """Shape-compatible stand-in for LookupResult when a small remainder
+    was answered host-side: only the per-file counters _account_lookup
+    reads."""
+
+    __slots__ = ("pos_counts", "neg_counts")
+
+    def __init__(self, pos_counts, neg_counts):
+        self.pos_counts = pos_counts
+        self.neg_counts = neg_counts
 
 
 @dataclasses.dataclass
@@ -110,6 +124,18 @@ class BourbonStore:
                                          cfg.lsm.plr_delta, cfg.engine.seg_cap)
         self.level_models: list = [None] * N_LEVELS
         self._level_model_versions = [-1] * N_LEVELS
+        # filter plane: per-level bloom filters ahead of the PLR descent
+        # (core.filters).  Rebuilt lazily at dispatch when a level's
+        # version moved; CBA picks bits-per-key from observed miss traffic
+        self.level_filters: list = [None] * N_LEVELS
+        self._filter_versions = [-1] * N_LEVELS
+        self._filter_sized_at: dict[int, int] = {}  # level -> stat files seen
+        self._flt_persisted: dict[int, int] = {}    # level -> epoch on disk
+        self.filters_recovered = 0
+        self.filters_built = 0
+        self.filter_screened = 0       # keys answered "absent" pre-dispatch
+        self.filter_screen_total = 0   # keys the host screen examined
+        self.filter_host_answered = 0  # post-screen keys answered host-side
         self._pending_wait: list = []
         self._seq = 0
         self._dead_seen = 0
@@ -140,6 +166,7 @@ class BourbonStore:
         self._obs_labels: dict = {}
         self._obs_events = None
         self._vf = NULL_HANDLE           # value-fetch stage handle
+        self._fp = NULL_HANDLE           # filter-probe stage handle
         # host I/O plane (repro.io): attach_io wires a worker pool so
         # large value fetches chunk across threads; None = inline fetch
         self._io = None
@@ -200,11 +227,12 @@ class BourbonStore:
                 eng.persisted_models.add(t.file_id)
         self.models_recovered = len(eng.persisted_models)
         # epochs must stay unique across reopens: resume past the largest
-        # persisted one even when the models themselves aren't loaded
-        # (e.g. a file-granularity open of a level-granularity directory)
-        if state.level_models:
-            self.executor.next_model_epoch = \
-                max(state.level_models.values()) + 1
+        # persisted one even when the models/filters themselves aren't
+        # loaded (e.g. a file-granularity open of a level-granularity dir)
+        epochs = list(state.level_models.values()) + list(
+            state.filters.values())
+        if epochs:
+            self.executor.next_model_epoch = max(epochs) + 1
         # persisted level models (§4.3): reload them BEFORE WAL replay and
         # pin the version baseline, so a replay-triggered flush invalidates
         # exactly the levels it touches — mirroring the manifest, whose
@@ -220,7 +248,23 @@ class BourbonStore:
                 self.level_models[level] = m
                 self._lm_persisted[level] = epoch
                 self.level_models_recovered += 1
+        # persisted filters reload the same way (before WAL replay, version
+        # baseline pinned): a reopened store serves the filtered path with
+        # zero rebuild.  A filter built under a different hash count is
+        # useless to this engine — treat it like a torn sidecar
+        if self.cfg.filters.enabled and state.filters:
+            from repro.storage import load_level_filter
+            from repro.storage.format import filter_path
+            for level, epoch in state.filters.items():
+                lf = load_level_filter(filter_path(eng.dir, level, epoch))
+                if lf is None or lf.k_hashes != self.cfg.lsm.bloom_k:
+                    continue   # torn/mismatched sidecar: rebuild lazily
+                lf.epoch = epoch
+                self.level_filters[level] = lf
+                self._flt_persisted[level] = epoch
+                self.filters_recovered += 1
         self._level_model_versions = list(self.tree.level_version)
+        self._filter_versions = list(self.tree.level_version)
         self.vlog = durable_vlog_cls.open(
             eng.dir, self.cfg.value_size, self.cfg.vlog_seg_slots,
             state.vlog_removed, state.vhead, fsync=self.cfg.fsync,
@@ -261,6 +305,7 @@ class BourbonStore:
         if self._storage is None:
             return
         self._sweep_level_models()
+        self._sweep_filters()
         self.vlog.close()
         self._storage.close(self._seq, self.clock.now, len(self.vlog),
                             vdead=self.vlog.dead_delta())
@@ -436,12 +481,25 @@ class BourbonStore:
             for i in range(N_LEVELS):
                 if self.tree.level_version[i] != self._level_model_versions[i]:
                     self._level_model_versions[i] = self.tree.level_version[i]
+        # filters invalidate on any structure change, independent of model
+        # granularity: compaction churn rewrites a level's key set, so its
+        # filter (and the persisted sidecar record, already dropped from
+        # the MANIFEST by the add/del edit) is stale.  The rebuild happens
+        # lazily at the next dispatch (_ensure_filters)
+        if self.cfg.filters.enabled:
+            for i in range(N_LEVELS):
+                if self.tree.level_version[i] != self._filter_versions[i]:
+                    self.level_filters[i] = None
+                    stale = self._flt_persisted.pop(i, None)
+                    if stale is not None and self._storage is not None:
+                        self._storage.drop_level_filter(i, stale)
 
     def _tick(self) -> None:
         if self.cfg.mode != "bourbon" or self.cfg.policy in ("offline", "never"):
             # offline/never: no online learning
             self.executor.tick(self.tree, self.clock.now, self.level_models)
             self._sweep_level_models()
+            self._sweep_filters()
             self._maintenance_tick()
             return
         if self.cfg.granularity == "file":
@@ -461,6 +519,7 @@ class BourbonStore:
             self._models_swept_at = self.executor.files_learned
             self._persist_new_models()
         self._sweep_level_models()
+        self._sweep_filters()
         self._maintenance_tick()
 
     def _maintenance_tick(self) -> None:
@@ -558,6 +617,75 @@ class BourbonStore:
             self._storage.persist_level_model(i, m)
             self._lm_persisted[i] = m.epoch
 
+    def _sweep_filters(self) -> None:
+        """Durably publish level filters the MANIFEST doesn't reference yet
+        (same epoch-not-yet-persisted discipline as _sweep_level_models)."""
+        if self._storage is None or not self.cfg.filters.enabled:
+            return
+        for i, f in enumerate(self.level_filters):
+            if f is None or f.epoch < 0:
+                continue
+            if self._flt_persisted.get(i) == f.epoch:
+                continue
+            self._storage.persist_level_filter(i, f)
+            self._flt_persisted[i] = f.epoch
+
+    # --------------------------------------------------------------- filters
+    def _ensure_filters(self) -> None:
+        """(Re)build level filters whose level changed since the last
+        build, plus CBA-triggered resizes when fresh miss-traffic stats
+        move the optimal bits-per-key far enough from what's built.  Build
+        is host-side numpy over the level's full key set (tombstones
+        included — a tombstone must pass its filter so the engine finds it
+        and reports the delete); cost is charged to the virtual clock like
+        a learning job."""
+        fc = self.cfg.filters
+        for li in range(N_LEVELS):
+            tables = self.tree.levels[li]
+            fresh = self.tree.level_version[li] != self._filter_versions[li]
+            if not tables:
+                if fresh:
+                    self.level_filters[li] = None
+                    self._filter_versions[li] = self.tree.level_version[li]
+                continue
+            cur = self.level_filters[li]
+            rebuilt = False
+            if not fresh and cur is not None:
+                # FPR drift: compaction churn changed the observed miss
+                # traffic — re-size only when the completed-file stats
+                # actually moved (cheap gate, not per-dispatch math)
+                st = self.cba.level_stats.get(li)
+                nf = st.n_files if st is not None else 0
+                # nf == 0 means no stats (e.g. right after reopen): sizing
+                # would just return the bootstrap base, so a recovered
+                # CBA-sized filter must not be churned against it
+                if nf and nf != self._filter_sized_at.get(li, -1):
+                    self._filter_sized_at[li] = nf
+                    n_keys = sum(t.n for t in tables)
+                    want = self.cba.filter_bits_per_key(
+                        li, n_keys, fc.bits_per_key, fc.min_bits_per_key,
+                        fc.max_bits_per_key, self.cfg.lsm.bloom_k)
+                    if abs(want - cur.bits_per_key) >= fc.rebuild_delta_bpk:
+                        rebuilt = True
+                        self.cba.filter_decisions["rebuilt"] += 1
+            if cur is not None and not fresh and not rebuilt:
+                continue
+            n_keys = sum(t.n for t in tables)
+            bpk = self.cba.filter_bits_per_key(
+                li, n_keys, fc.bits_per_key, fc.min_bits_per_key,
+                fc.max_bits_per_key, self.cfg.lsm.bloom_k)
+            keys = (tables[0].keys if len(tables) == 1 else
+                    np.concatenate([t.keys for t in tables]))
+            f = build_level_filter(keys, bpk, self.cfg.lsm.bloom_k)
+            f.epoch = self.executor.alloc_model_epoch()
+            self.level_filters[li] = f
+            self._filter_versions[li] = self.tree.level_version[li]
+            self.filters_built += 1
+            self.cba.filter_builds += 1
+            cost = self.cfg.costs.t_filter_build(n_keys)
+            self.cba.filter_us += cost
+            self.clock.advance(cost)
+
     # ------------------------------------------------------------------ read
     def _engine_mode(self) -> str:
         if self.cfg.mode == "wisckey":
@@ -571,6 +699,61 @@ class BourbonStore:
             return "model_pure"   # skip the dead baseline arm
         return "model"
 
+    def _host_answer(self, keys: np.ndarray, fmaybe_keep: np.ndarray,
+                     live_idx: list) -> tuple:
+        """Answer a small post-screen remainder without a device round
+        trip: numpy binary search over the host sstable key arrays,
+        mirroring the engine's descent exactly (newest-first L0 slots,
+        then the candidate file per sorted level, per-level filter mask
+        applied the same way) so results stay byte-identical with the
+        device path.  An absent sweep collapses to a handful of bloom
+        false positives — not worth the fixed device-dispatch cost."""
+        B = keys.shape[0]
+        found = np.zeros(B, bool)
+        vptr = np.full(B, -1, np.int64)
+        pos = [np.zeros(len(self.tree.levels[li]), np.int64)
+               for li in range(N_LEVELS)]
+        neg = [np.zeros_like(p) for p in pos]
+        mrow = {li: fmaybe_keep[r] for r, li in enumerate(live_idx)}
+        maxk = {li: np.array([t.keys[-1] for t in self.tree.levels[li]],
+                             np.int64)
+                for li in live_idx if li > 0}
+        for bi in range(B):
+            k = int(keys[bi])
+            for li in live_idx:
+                row = mrow[li]
+                if not row[bi]:
+                    continue                  # filter-pruned level
+                tables = self.tree.levels[li]
+                hit = False
+                if li == 0:
+                    for si, t in enumerate(tables):
+                        if t.keys[0] <= k <= t.keys[-1]:
+                            j = int(np.searchsorted(t.keys, k))
+                            if j < t.n and int(t.keys[j]) == k:
+                                pos[0][si] += 1
+                                vptr[bi] = int(t.vptrs[j])
+                                hit = True
+                                break
+                            neg[0][si] += 1
+                else:
+                    # candidate = first file with max_key >= k (engine's
+                    # FindFiles), valid if the file's range covers k
+                    si = int(np.searchsorted(maxk[li], k))
+                    if si < len(tables) and int(tables[si].keys[0]) <= k:
+                        t = tables[si]
+                        j = int(np.searchsorted(t.keys, k))
+                        if j < t.n and int(t.keys[j]) == k:
+                            pos[li][si] += 1
+                            vptr[bi] = int(t.vptrs[j])
+                            hit = True
+                        else:
+                            neg[li][si] += 1
+                if hit:
+                    found[bi] = True
+                    break
+        return found, vptr, pos, neg
+
     def dispatch_get(self, probes: np.ndarray) -> PendingBatch:
         """Non-blocking half of :meth:`get_batch`: answer the memtable
         overlay host-side and launch the device lookup for the misses,
@@ -580,18 +763,76 @@ class BourbonStore:
         the snapshot-per-batch contract the serving plane wants."""
         probes = np.asarray(probes, np.int64)
         mt_found, mt_vptr = self.memtable.get_batch(probes)
+        mt_found = mt_found.copy()
+        mt_vptr = mt_vptr.copy()
         miss = ~mt_found
         n_miss = int(miss.sum())
+        fstate = None
+        fmaybe_keep = live_idx = None
+        if self.cfg.filters.enabled and n_miss:
+            # host screen: keys the filters rule out at *every* level never
+            # dispatch — they resolve as misses with zero device probes
+            self._ensure_filters()
+            t0 = self._fp.begin()
+            # only populated levels can hold the key; an empty level must
+            # not contribute an all-maybe row or nothing ever screens
+            live_idx = [li for li in range(N_LEVELS) if self.tree.levels[li]]
+            live_filters = [self.level_filters[li] for li in live_idx]
+            fmaybe = filter_maybe_np(live_filters, probes[miss])
+            screened = ~fmaybe.any(axis=0)
+            self._fp.end(t0)
+            n_scr = int(screened.sum())
+            self.filter_screen_total += n_miss
+            if n_scr:
+                self.filter_screened += n_scr
+                miss_idx = np.flatnonzero(miss)
+                miss[miss_idx[screened]] = False
+                mt_vptr[miss_idx[screened]] = -1   # engine miss convention
+                n_miss -= n_scr
+            fmaybe_keep = fmaybe[:, ~screened]
+            fstate = self.engine.build_filter_state(self.level_filters)
+            if 0 < n_miss <= self.cfg.filters.host_answer_max:
+                # remainder too small to be worth a device round trip:
+                # binary-search the host sstable arrays instead
+                idx = np.flatnonzero(miss)
+                hf, hv, hpos, hneg = self._host_answer(
+                    probes[miss], fmaybe_keep, live_idx)
+                mt_found[idx] = hf
+                mt_vptr[idx] = hv
+                miss[idx] = False
+                self.filter_host_answered += n_miss
+                n_miss = 0
+                self._account_lookup(_HostLookupRes(hpos, hneg))
         pending = None
         if n_miss:
-            pad = _next_pow2(max(n_miss, 64))
+            # quarter-pow2 buckets, not pow2: the filter screen shrinks
+            # n_miss to arbitrary sizes, and rounding 2100 all the way back
+            # up to 4096 would hand the screening win straight back to the
+            # kernel width.  Still a small, bounded set of jit cache keys.
+            n = max(n_miss, 64)
+            step = max(64, _next_pow2(n) // 4)
+            pad = -(-n // step) * step
             eng_probes = np.full(pad, _PAD_PROBE, np.int64)
             eng_probes[:n_miss] = probes[miss]
+            fm_host = level_hint = None
+            if fstate is not None:
+                # reuse the host screen's hashes for the dispatched keys —
+                # all-True rows for filterless levels match the device
+                # probe; pad lanes stay all-True (results are discarded)
+                fm_host = np.ones((N_LEVELS, pad), bool)
+                hint = [True] * N_LEVELS
+                for row, li in enumerate(live_idx):
+                    fm_host[li, :n_miss] = fmaybe_keep[row]
+                    # no dispatched key can live at a level whose mask row
+                    # is all-False — the engine drops it from the program
+                    hint[li] = bool(fmaybe_keep[row].any())
+                level_hint = tuple(hint)
             state = self.engine.build_state(self.tree, self.level_models)
             pending = self.engine.lookup_async(
                 state, eng_probes, self._engine_mode(), self.vlog,
-                l0_live=len(self.tree.levels[0]))
-        return PendingBatch(probes, mt_found.copy(), mt_vptr.copy(),
+                l0_live=len(self.tree.levels[0]), fstate=fstate,
+                fmaybe_host=fm_host, level_maybe=level_hint)
+        return PendingBatch(probes, mt_found, mt_vptr,
                             miss, n_miss, pending)
 
     def resolve_get(self, pb: PendingBatch) -> tuple[np.ndarray, np.ndarray]:
@@ -887,6 +1128,7 @@ class BourbonStore:
         self.executor.events = obs.events
         self.engine.record_probe_split = True
         self._vf = obs.tracer.stage("value_fetch")
+        self._fp = obs.tracer.stage("filter_probe")
         if self._storage is not None:
             # traced writes span into the WAL: append -> commit-group
             # fsync becomes a causal fan-in in the span graph
@@ -908,6 +1150,7 @@ class BourbonStore:
         self.executor.events = None
         self.engine.record_probe_split = False
         self._vf = NULL_HANDLE
+        self._fp = NULL_HANDLE
         if self._storage is not None:
             self._storage.set_tracer(NULL_CTRACE)
 
@@ -937,6 +1180,19 @@ class BourbonStore:
               **lb).observe_total(int(split[li, 0]))
             c("engine_probes_total", level=str(li), path="baseline",
               **lb).observe_total(int(split[li, 1]))
+        # per-level filter pruning and false-positive attribution, same
+        # lazy one-sync discipline as the probe split
+        fsplit = self.engine.filter_stats_np()
+        for li in range(N_LEVELS):
+            c("engine_filter_pruned_total", level=str(li),
+              **lb).observe_total(int(fsplit[li, 0]))
+            c("engine_filter_fp_total", level=str(li),
+              **lb).observe_total(int(fsplit[li, 1]))
+        c("store_filter_screened_total", **lb).observe_total(
+            self.filter_screened)
+        c("store_filter_host_answered_total", **lb).observe_total(
+            self.filter_host_answered)
+        c("store_filter_builds_total", **lb).observe_total(self.filters_built)
         if self._storage is not None:
             ws = self._storage.wal_stats()
             c("store_wal_appends_total", **lb).observe_total(ws["appends"])
@@ -985,12 +1241,22 @@ class BourbonStore:
             "level_attempts": self.executor.level_attempts,
             "level_failures": self.executor.level_failures,
             "cba_decisions": dict(self.cba.decisions),
+            "filters_built": self.filters_built,
+            "filter_screened": self.filter_screened,
+            "filter_host_answered": self.filter_host_answered,
+            "filter_screen_total": self.filter_screen_total,
+            "filter_us": self.cba.filter_us,
+            "filter_decisions": dict(self.cba.filter_decisions),
+            "filter_bits": sum(f.n_words * 64 for f in self.level_filters
+                               if f is not None),
         }
         if self._storage is not None:
             out.update(
                 models_recovered=self.models_recovered,
                 level_models_recovered=self.level_models_recovered,
                 level_models_persisted=dict(self._lm_persisted),
+                filters_recovered=self.filters_recovered,
+                filters_persisted=dict(self._flt_persisted),
                 vlog_disk_bytes=self.vlog.disk_bytes(),
                 vlog_segments_removed=len(self.vlog.removed),
                 vlog_dead_entries=self.vlog.dead_entries,

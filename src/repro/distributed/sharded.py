@@ -50,11 +50,13 @@ from repro.core.distributed import (DistStoreConfig, build_dist_get,
                                     build_dist_state_from_shards,
                                     dist_get_local, next_pow2)
 from repro.core.engine import EngineConfig
+from repro.core.filters import FilterConfig, build_level_filter
 from repro.core.jaxcompat import make_mesh, set_mesh
 from repro.core.lsm import LSMConfig
 from repro.core.plr import greedy_plr_np
 from repro.core.store import BourbonStore, StoreConfig
 from repro.io import ValueFetch, wait_all
+from repro.kernels.ref import bloom_probe_stack_ref
 from repro.obs import NULL_CTRACE, NULL_HANDLE, publish_stats
 from repro.storage.format import fsync_dir, sst_path
 from repro.storage.manifest import read_manifest
@@ -69,22 +71,32 @@ _PAD_PROBE = -(1 << 62)
 
 @partial(jax.jit, static_argnums=(2, 3))
 def _local_get_all_shards(state: dict, probes: jnp.ndarray,
-                          n_shards: int, delta: int):
+                          n_shards: int, delta: int, maybe=None):
     """Host-fallback GET as ONE compiled program: every shard's
     `dist_get_local` kernel plus the owner-exclusive where-merge, fused.
     Running this eagerly (the old path) paid per-op dispatch overhead for
     hundreds of tiny ops and blocked the host for the whole walk; jitted,
     the call is a single async enqueue — which is what lets the sharded
-    store's dispatch half return before the device finishes."""
+    store's dispatch half return before the device finishes.  ``maybe``
+    (an (S, B) bool mask the caller's filter probe produced) prunes each
+    shard's descent to the probes its bloom filter admits."""
     n = probes.shape[0]
     found = jnp.zeros(n, bool)
     vptr = jnp.full(n, -1, jnp.int64)
     for s in range(n_shards):
         shard = {k: v[s: s + 1] for k, v in state.items()}
-        h, vv = dist_get_local(shard, probes, delta)
+        h, vv = dist_get_local(shard, probes, delta,
+                               maybe=None if maybe is None else maybe[s])
         vptr = jnp.where(h, vv, vptr)
         found = found | h
     return found, vptr
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _shard_filter_probe(fbits: jnp.ndarray, fnw: jnp.ndarray,
+                        probes: jnp.ndarray, k_hashes: int) -> jnp.ndarray:
+    """(S, B) maybe-mask over every shard's bloom row — one async call."""
+    return bloom_probe_stack_ref(fbits, fnw, probes, k_hashes)
 
 
 @dataclasses.dataclass
@@ -121,9 +133,11 @@ def _store_cfg_to_dict(cfg: StoreConfig) -> dict:
 def _store_cfg_from_dict(d: dict) -> StoreConfig:
     d = dict(d)
     nested = {"lsm": LSMConfig, "engine": EngineConfig, "cba": CBAConfig,
-              "costs": CostModel, "maintenance": MaintenanceConfig}
+              "costs": CostModel, "maintenance": MaintenanceConfig,
+              "filters": FilterConfig}
     for key, cls in nested.items():
-        d[key] = cls(**d[key])
+        if key in d:   # topologies persisted before a field existed
+            d[key] = cls(**d[key])
     return StoreConfig(**d)
 
 
@@ -199,6 +213,7 @@ class ShardedStore:
         self._get_fn = None
         self._snaps = [None] * len(shards)
         self._snap_models = [None] * len(shards)
+        self._snap_filters = [None] * len(shards)
         self._snap_epochs = [-1] * len(shards)
         self._state = None
         self._state_epochs = None
@@ -208,6 +223,7 @@ class ShardedStore:
         # keep the resolve hot path branch-free when obs is off
         self._obs = None
         self._vf = NULL_HANDLE
+        self._fp = NULL_HANDLE
         self._ct = NULL_CTRACE
         # host I/O plane (repro.io) — attach_io wires it; None keeps every
         # path on the original inline code
@@ -426,15 +442,26 @@ class ShardedStore:
         optimization if flush-heavy workloads make it show up."""
         epochs = self._shard_epochs()
         if self._state is None or epochs != self._state_epochs:
+            fc = self.shards[0].cfg.filters
+            bloom_k = self.shards[0].cfg.lsm.bloom_k
             for i, st in enumerate(self.shards):
                 if self._snap_epochs[i] != epochs[i]:
                     self._snaps[i] = merge_live(list(st.tree.all_files()))
                     self._snap_models[i] = (
                         greedy_plr_np(self._snaps[i][0], delta=self.delta)
                         if self._snaps[i][0].shape[0] else None)
+                    # per-shard bloom row, cached under the same epoch:
+                    # the fused GET prunes shards that definitely lack
+                    # the probe before any PLR work
+                    self._snap_filters[i] = (
+                        build_level_filter(self._snaps[i][0],
+                                           fc.bits_per_key, bloom_k)
+                        if fc.enabled and self._snaps[i][0].shape[0]
+                        else None)
                     self._snap_epochs[i] = epochs[i]
             state_np = build_dist_state_from_shards(
-                self._snaps, self.delta, models=self._snap_models)
+                self._snaps, self.delta, models=self._snap_models,
+                filters=self._snap_filters if fc.enabled else None)
             self._state = {k: jnp.asarray(v) for k, v in state_np.items()}
             self._state_epochs = epochs
             self.state_epoch += 1
@@ -454,7 +481,12 @@ class ShardedStore:
             if self._get_fn is None:
                 cfg = DistStoreConfig(n_keys=0, probe_batch=0,
                                       delta=self.delta)
-                self._get_fn = build_dist_get(self._mesh, cfg)
+                # state layout pinned to what device_state() built: with
+                # filters enabled it carries fbits/fnw rows the shard
+                # kernel probes in-kernel before its descent
+                self._get_fn = build_dist_get(
+                    self._mesh, cfg, state_keys=tuple(sorted(state)),
+                    k_hashes=self.shards[0].cfg.lsm.bloom_k)
             pad = next_pow2(max(n, 64))
             pad = -(-pad // self.n_shards) * self.n_shards
             buf = np.full(pad, _PAD_PROBE, np.int64)
@@ -469,8 +501,18 @@ class ShardedStore:
         pad = next_pow2(max(n, 64))
         buf = np.full(pad, _PAD_PROBE, np.int64)
         buf[:n] = probes
-        return _local_get_all_shards(state, jnp.asarray(buf),
-                                     self.n_shards, self.delta)
+        buf_dev = jnp.asarray(buf)
+        maybe = None
+        if "fbits" in state:
+            # one batched stack-probe for every shard row, async like the
+            # lookup itself; the handle is timed as its own read stage
+            t0 = self._fp.begin()
+            maybe = _shard_filter_probe(state["fbits"], state["fnw"],
+                                        buf_dev,
+                                        self.shards[0].cfg.lsm.bloom_k)
+            self._fp.end(t0)
+        return _local_get_all_shards(state, buf_dev,
+                                     self.n_shards, self.delta, maybe)
 
     def dispatch_get(self, probes: np.ndarray, with_values: bool = False,
                      trace=None) -> ShardPendingBatch:
@@ -627,6 +669,7 @@ class ShardedStore:
         cross-shard aggregates."""
         self._obs = obs
         self._vf = obs.tracer.stage("value_fetch")
+        self._fp = obs.tracer.stage("filter_probe")
         self._ct = obs.ctrace
         for i, st in enumerate(self.shards):
             st.attach_obs(obs, labels={"shard": str(i)})
@@ -640,6 +683,7 @@ class ShardedStore:
             self._obs.registry.unregister_collector(("fleet", self.path))
         self._obs = None
         self._vf = NULL_HANDLE
+        self._fp = NULL_HANDLE
         self._ct = NULL_CTRACE
         for st in self.shards:
             st.detach_obs()

@@ -4,6 +4,8 @@ Each kernel: <name>.py (pl.pallas_call + BlockSpec), validated against
 ref.py in interpret mode; ops.py is the dispatching public API.
 """
 
-from .ops import plr_lookup, bounded_search, bloom_probe, sstable_search
+from .ops import (plr_lookup, bounded_search, bloom_probe,
+                  bloom_probe_stack, sstable_search)
 
-__all__ = ["plr_lookup", "bounded_search", "bloom_probe", "sstable_search"]
+__all__ = ["plr_lookup", "bounded_search", "bloom_probe",
+           "bloom_probe_stack", "sstable_search"]

@@ -13,10 +13,11 @@ import jax.numpy as jnp
 from . import ref as _ref
 from .plr_lookup import plr_lookup_pallas
 from .bounded_search import bounded_search_pallas
-from .bloom_probe import bloom_probe_pallas
+from .bloom_probe import bloom_probe_pallas, bloom_probe_stack_pallas
 from .sstable_search import sstable_search_pallas
 
-__all__ = ["plr_lookup", "bounded_search", "bloom_probe", "sstable_search"]
+__all__ = ["plr_lookup", "bounded_search", "bloom_probe",
+           "bloom_probe_stack", "sstable_search"]
 
 
 def _mode(impl: str) -> tuple[bool, bool]:
@@ -58,6 +59,17 @@ def bloom_probe(bits, probes, n_words, k_hashes: int = 7, impl="ref",
                                            jnp.asarray(n_words))
     return bloom_probe_pallas(bits, probes, n_words, k_hashes=k_hashes,
                               block_b=block_b, interpret=interp)
+
+
+def bloom_probe_stack(bits, n_words, probes, k_hashes: int = 7, impl="ref",
+                      block_b: int = 256):
+    """Filter plane: (L, W) stacked per-level filters -> (L, B) maybe-mask."""
+    use_pallas, interp = _mode(impl)
+    if not use_pallas:
+        return _ref.bloom_probe_stack_ref(bits, jnp.asarray(n_words),
+                                          probes, k_hashes)
+    return bloom_probe_stack_pallas(bits, n_words, probes, k_hashes=k_hashes,
+                                    block_b=block_b, interpret=interp)
 
 
 def sstable_search(fences, keys, probes, n_blocks, n, block_records: int = 256,

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["plr_lookup_ref", "bounded_search_ref", "bloom_probe_kernel_ref",
-           "sstable_search_ref"]
+           "bloom_probe_stack_ref", "sstable_search_ref"]
 
 
 def _bisect(keys: jnp.ndarray, probes: jnp.ndarray, hi0: jnp.ndarray,
@@ -79,6 +79,32 @@ def bloom_probe_kernel_ref(bits: jnp.ndarray, probes: jnp.ndarray,
     """Shared-filter bloom probe (same math as core.bloom.bloom_probe_ref)."""
     from repro.core.bloom import bloom_probe_ref
     return bloom_probe_ref(bits, probes, k_hashes, n_words=n_words)
+
+
+def bloom_probe_stack_ref(bits: jnp.ndarray, n_words: jnp.ndarray,
+                          probes: jnp.ndarray,
+                          k_hashes: int) -> jnp.ndarray:
+    """Filter-plane probe: (L, W) stacked filters x (B,) probes -> (L, B).
+
+    ``n_words[l] == 0`` marks a level with no filter (all-True row); the
+    hash modulus is each level's build-time word count, never the padded W.
+    """
+    L, W = bits.shape
+    nw = jnp.asarray(n_words, jnp.int32)
+    m = jnp.maximum(nw, 1).astype(jnp.uint64)[:, None] * jnp.uint64(64)
+    kk = probes.astype(jnp.uint64)
+    h1 = kk * jnp.uint64(0x9E3779B97F4A7C15)
+    h1 = h1 ^ (h1 >> jnp.uint64(29))
+    h2 = (kk * jnp.uint64(0xC2B2AE3D27D4EB4F)) | jnp.uint64(1)
+    h2 = h2 ^ (h2 >> jnp.uint64(31))
+    maybe = jnp.ones((L, probes.shape[0]), bool)
+    for i in range(k_hashes):
+        pos = (h1 + jnp.uint64(i) * h2)[None, :] % m
+        widx = jnp.clip((pos >> jnp.uint64(6)).astype(jnp.int32), 0, W - 1)
+        word = jnp.take_along_axis(bits, widx, axis=1)
+        bit = (word >> (pos & jnp.uint64(63))) & jnp.uint64(1)
+        maybe = maybe & (bit == jnp.uint64(1))
+    return maybe | (nw == 0)[:, None]
 
 
 def sstable_search_ref(fences: jnp.ndarray, keys: jnp.ndarray,

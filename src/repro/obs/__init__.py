@@ -31,8 +31,8 @@ __all__ = ["CausalTracer", "Counter", "EventLog", "Gauge", "Histogram",
 
 # canonical read-path stage names (the §3-style decomposition the serve
 # bench reports); layers pre-bind handles for exactly these
-READ_STAGES = ("admission", "coalesce", "cache_probe", "dispatch",
-               "compute", "resolve", "value_fetch")
+READ_STAGES = ("admission", "coalesce", "cache_probe", "filter_probe",
+               "dispatch", "compute", "resolve", "value_fetch")
 
 
 @dataclasses.dataclass

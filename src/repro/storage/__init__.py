@@ -7,8 +7,9 @@ from .engine import StorageEngine
 from .manifest import (ManifestState, ManifestWriter, checkpoint_edit,
                        read_manifest, set_current)
 from .recovery import load_tables
-from .sstable_io import (append_model, load_level_model, load_sstable,
-                         write_level_model, write_sstable)
+from .sstable_io import (append_model, load_level_filter, load_level_model,
+                         load_sstable, write_level_filter, write_level_model,
+                         write_sstable)
 from .vlog import DurableValueLog
 from .wal import WALWriter, replay_wal
 
@@ -16,5 +17,6 @@ __all__ = [
     "StorageEngine", "ManifestState", "ManifestWriter", "checkpoint_edit",
     "read_manifest", "set_current", "load_tables", "append_model",
     "load_sstable", "write_sstable", "load_level_model", "write_level_model",
+    "load_level_filter", "write_level_filter",
     "DurableValueLog", "WALWriter", "replay_wal",
 ]

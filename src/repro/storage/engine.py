@@ -24,10 +24,12 @@ import os
 
 import numpy as np
 
-from .format import fsync_dir, lmodel_path, manifest_name, sst_path, wal_path
+from .format import (filter_path, fsync_dir, lmodel_path, manifest_name,
+                     sst_path, wal_path)
 from .manifest import (ManifestState, ManifestWriter, checkpoint_edit,
                        read_manifest, set_current)
-from .sstable_io import append_model, write_level_model, write_sstable
+from .sstable_io import (append_model, write_level_filter, write_level_model,
+                         write_sstable)
 from .wal import GroupCommitWAL, WALWriter, replay_wal
 
 __all__ = ["StorageEngine"]
@@ -342,6 +344,29 @@ class StorageEngine:
         replay drops the record), so this is pure garbage collection — a
         crash beforehand just leaves a file the next open sweeps."""
         path = lmodel_path(self.dir, level, epoch)
+        if os.path.exists(path):
+            os.unlink(path)
+
+    # ---------------------------------------------------------------- filters
+    def persist_level_filter(self, level: int, flt) -> None:
+        """Durably publish a level bloom filter, same sidecar-first
+        protocol as :meth:`persist_level_model`: bits file fully written
+        (and renamed) before the MANIFEST ``filter`` edit names it, so a
+        torn edit leaves an orphan sidecar the next open sweeps."""
+        epoch = int(flt.epoch)
+        write_level_filter(filter_path(self.dir, level, epoch), flt,
+                           self.fsync)
+        old = self.state.filters.get(level)
+        edit = {"filter": {str(level): epoch}}
+        self.manifest.append(edit)
+        self.state.apply(edit)
+        if old is not None and old != epoch:
+            self.drop_level_filter(level, old)
+
+    def drop_level_filter(self, level: int, epoch: int) -> None:
+        """Remove a superseded/invalidated filter sidecar (the manifest
+        already stopped referencing it — pure garbage collection)."""
+        path = filter_path(self.dir, level, epoch)
         if os.path.exists(path):
             os.unlink(path)
 

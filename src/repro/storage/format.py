@@ -22,13 +22,15 @@ import struct
 import zlib
 
 __all__ = [
-    "MAGIC_SST", "MAGIC_MODEL", "crc32", "write_frame", "read_frames",
-    "valid_frames_end", "fsync_dir", "sst_path", "wal_path", "vlog_path",
-    "lmodel_path", "manifest_name", "CURRENT", "FRAME_HDR_SIZE",
+    "MAGIC_SST", "MAGIC_MODEL", "MAGIC_FILTER", "crc32", "write_frame",
+    "read_frames", "valid_frames_end", "fsync_dir", "sst_path", "wal_path",
+    "vlog_path", "lmodel_path", "filter_path", "manifest_name", "CURRENT",
+    "FRAME_HDR_SIZE",
 ]
 
 MAGIC_SST = b"BRBNSST1"
 MAGIC_MODEL = b"BRBNPLR1"
+MAGIC_FILTER = b"BRBNFLT1"
 CURRENT = "CURRENT"
 
 _FRAME_HDR = struct.Struct("<II")
@@ -96,6 +98,12 @@ def lmodel_path(dirpath: str, level: int, epoch: int) -> str:
     """Sidecar holding a persisted level-granularity PLR model; the
     MANIFEST ``lmodel`` record names the (level, epoch) pair that is live."""
     return os.path.join(dirpath, f"lm-{level}-{epoch:06d}.plm")
+
+
+def filter_path(dirpath: str, level: int, epoch: int) -> str:
+    """Sidecar holding a persisted level bloom filter; the MANIFEST
+    ``filter`` record names the (level, epoch) pair that is live."""
+    return os.path.join(dirpath, f"flt-{level}-{epoch:06d}.bf")
 
 
 def manifest_name(no: int) -> str:

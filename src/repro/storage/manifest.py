@@ -26,6 +26,11 @@ Each edit may carry::
                                         record first (a structural change
                                         invalidates the model), so replay
                                         order alone decides validity.
+    filter    {level: epoch}            level bloom filter published for a
+                                        level; the bits live in the
+                                        ``flt-<level>-<epoch>.bf`` sidecar.
+                                        Same touched-level invalidation rule
+                                        as lmodel.
 
 ``CURRENT`` names the live manifest file.  Replaying the edits in order
 yields the exact live-file set and counters; frames use the shared
@@ -65,6 +70,7 @@ class ManifestState:
     seg_slots: int | None = None
     plr_delta: int | None = None    # error bound the persisted models carry
     level_models: dict = dataclasses.field(default_factory=dict)  # lvl -> epoch
+    filters: dict = dataclasses.field(default_factory=dict)       # lvl -> epoch
 
     def apply(self, edit: dict) -> None:
         if "vsize" in edit:
@@ -84,10 +90,13 @@ class ManifestState:
             self.live[fid] = level
         for level in touched:
             self.level_models.pop(level, None)
+            self.filters.pop(level, None)
         # applied after the invalidation so a checkpoint edit carrying both
-        # the full live set and the lmodel records keeps its models
+        # the full live set and the lmodel/filter records keeps them
         for level, epoch in edit.get("lmodel", {}).items():
             self.level_models[int(level)] = int(epoch)
+        for level, epoch in edit.get("filter", {}).items():
+            self.filters[int(level)] = int(epoch)
         if "wal" in edit:
             self.wal_no = edit["wal"]
         if "seq" in edit:
@@ -172,6 +181,8 @@ def checkpoint_edit(state: ManifestState) -> dict:
     if state.level_models:
         edit["lmodel"] = {str(l): e
                           for l, e in sorted(state.level_models.items())}
+    if state.filters:
+        edit["filter"] = {str(l): e for l, e in sorted(state.filters.items())}
     return edit
 
 

@@ -71,4 +71,8 @@ def load_tables(dirpath: str, state: ManifestState,
             level, epoch = (int(p) for p in name[3:-4].split("-"))
             if state.level_models.get(level) != epoch:
                 os.unlink(os.path.join(dirpath, name))
+        elif name.startswith("flt-") and name.endswith(".bf"):
+            level, epoch = (int(p) for p in name[4:-3].split("-"))
+            if state.filters.get(level) != epoch:
+                os.unlink(os.path.join(dirpath, name))
     return levels

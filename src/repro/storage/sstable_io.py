@@ -36,14 +36,17 @@ import numpy as np
 from repro.core.plr import PLRModel
 from repro.core.sstable import FileStats, SSTable
 
-from .format import MAGIC_MODEL, MAGIC_SST, crc32, fsync_dir, sst_path
+from .format import (MAGIC_FILTER, MAGIC_MODEL, MAGIC_SST, crc32, fsync_dir,
+                     sst_path)
 
 __all__ = ["write_sstable", "append_model", "load_sstable",
-           "write_level_model", "load_level_model"]
+           "write_level_model", "load_level_model",
+           "write_level_filter", "load_level_filter"]
 
 _HDR = struct.Struct("<8sqiiqqqdIxxxxq")
 HEADER_SIZE = _HDR.size          # 72, a multiple of 8
 _MODEL_HDR = struct.Struct("<8siiIxxxx")  # 24 bytes, multiple of 8
+_FILTER_HDR = struct.Struct("<8sqqiiIxxxx")  # 40 bytes, multiple of 8
 _MODEL_OFF_POS = HEADER_SIZE - 8  # model_offset is the last header field
 
 
@@ -145,6 +148,50 @@ def load_level_model(path: str, verify: bool = True) -> PLRModel | None:
     return PLRModel(jnp.asarray(starts), jnp.asarray(slopes),
                     jnp.asarray(icepts), jnp.asarray(ns, jnp.int32),
                     delta=delta)
+
+
+def write_level_filter(path: str, flt, fsync: bool = False) -> None:
+    """Persist a level bloom filter as a standalone sidecar file —
+    same tmp + ``os.replace`` publish discipline as level models, so a
+    reader never sees a partial filter and the rename is durable before
+    the MANIFEST ``filter`` record that points at it."""
+    words = np.ascontiguousarray(flt.bits, np.uint64).tobytes()
+    hdr = _FILTER_HDR.pack(MAGIC_FILTER, int(flt.n_keys), int(flt.n_words),
+                           int(flt.k_hashes), int(flt.bits_per_key),
+                           crc32(words))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(hdr)
+        f.write(words)
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+    if fsync:
+        fsync_dir(os.path.dirname(path) or ".")
+
+
+def load_level_filter(path: str, verify: bool = True):
+    """Load a filter sidecar; returns None when the file is missing, torn,
+    or fails its checksum — a filter is always recomputable from the level's
+    keys, so the caller rebuilds lazily instead of refusing to open."""
+    from repro.core.filters import LevelFilter
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError:
+        return None
+    if len(data) < _FILTER_HDR.size:
+        return None
+    magic, n_keys, n_words, k_hashes, bpk, fcrc = _FILTER_HDR.unpack_from(
+        data, 0)
+    words = data[_FILTER_HDR.size: _FILTER_HDR.size + 8 * n_words]
+    if (magic != MAGIC_FILTER or len(words) < 8 * n_words
+            or (verify and crc32(words) != fcrc)):
+        return None
+    bits = np.frombuffer(words, np.uint64, count=n_words).copy()
+    return LevelFilter(bits=bits, n_words=n_words, k_hashes=k_hashes,
+                       bits_per_key=bpk, n_keys=n_keys)
 
 
 def load_sstable(path: str, verify: bool = True) -> SSTable:

@@ -1,0 +1,326 @@
+"""Filter plane: stacked bloom-probe kernel parity, zero-false-negative
+property, CBA sizing, MANIFEST ``filter`` records + ``flt-*.bf`` sidecars
+(reopen-no-rebuild, torn-sidecar fallback), and filtered-vs-unfiltered
+GET identity on mixed hit/miss batches."""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:
+    from _hypothesis_shim import given, settings, st as hst
+
+from repro.core import BourbonStore, LSMConfig, StoreConfig
+from repro.core.bloom import bloom_build_np, bloom_probe_np, bloom_words
+from repro.core.engine import EngineConfig
+from repro.core.filters import (FilterConfig, build_level_filter,
+                                filter_maybe_np)
+from repro.core.lsm import N_LEVELS
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+def small_cfg(**kw):
+    defaults = dict(value_size=16,
+                    lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
+                                  l1_cap_records=1 << 13),
+                    engine=EngineConfig(seg_cap=4096))
+    defaults.update(kw)
+    return StoreConfig(**defaults)
+
+
+def _load(st: BourbonStore, keys: np.ndarray) -> None:
+    for off in range(0, keys.shape[0], 4096):
+        st.put_batch(keys[off: off + 4096])
+    st.flush_all()
+
+
+def _stack(rng, n_levels=3, n_keys=2000, bpk=10, k=7):
+    """Build a padded (L, W) filter stack + the per-level key sets."""
+    key_sets, filters = [], []
+    for li in range(n_levels):
+        ks = np.unique(rng.integers(0, 1 << 40, n_keys * (li + 1)))
+        key_sets.append(ks)
+        filters.append(build_level_filter(ks, bpk, k))
+    W = max(64, 1 << (max(f.n_words for f in filters) - 1).bit_length())
+    bits = np.zeros((n_levels, W), np.uint64)
+    nw = np.zeros(n_levels, np.int32)
+    for li, f in enumerate(filters):
+        bits[li, : f.n_words] = f.bits
+        nw[li] = f.n_words
+    return key_sets, filters, bits, nw
+
+
+# ------------------------------------------------------------------ kernels
+
+@pytest.mark.parametrize("B", [64, 100, 256, 300, 1000])
+@pytest.mark.parametrize("k", [4, 7])
+def test_bloom_stack_kernel_parity(B, k):
+    """Pallas interpret-mode stack probe == jnp oracle == per-level host
+    probe, including non-power-of-two batches the wrapper must pad."""
+    rng = np.random.default_rng(B + k)
+    key_sets, filters, bits, nw = _stack(rng, k=k)
+    probes = np.concatenate([key_sets[0][:B // 2],
+                             rng.integers(0, 1 << 40, B - B // 2)])
+    want = np.stack([bloom_probe_np(f.bits, probes, k, n_words=f.n_words)
+                     for f in filters])
+    ref = np.asarray(kref.bloom_probe_stack_ref(
+        jnp.asarray(bits), jnp.asarray(nw), jnp.asarray(probes), k))
+    pal = np.asarray(ops.bloom_probe_stack(
+        jnp.asarray(bits), jnp.asarray(nw), jnp.asarray(probes),
+        k_hashes=k, impl="pallas_interpret"))
+    np.testing.assert_array_equal(ref, want)
+    np.testing.assert_array_equal(pal, want)
+
+
+def test_bloom_stack_kernel_empty_row_is_all_maybe():
+    """nw == 0 marks a level without a filter: its row must be all-True
+    (pruning on it would drop real keys)."""
+    rng = np.random.default_rng(0)
+    _, _, bits, nw = _stack(rng, n_levels=3)
+    nw[1] = 0
+    bits[1] = 0
+    probes = rng.integers(0, 1 << 40, 128)
+    for impl in ("ref", "pallas_interpret"):
+        out = np.asarray(ops.bloom_probe_stack(
+            jnp.asarray(bits), jnp.asarray(nw), jnp.asarray(probes),
+            k_hashes=7, impl=impl))
+        assert out[1].all()
+
+
+@pytest.mark.parametrize("B", [60, 100, 257, 500])
+def test_bloom_probe_pallas_pads_ragged_batches(B):
+    """Regression: bloom_probe_pallas asserted B % block_b == 0; it must
+    pad internally and slice the result instead."""
+    rng = np.random.default_rng(B)
+    keys = np.unique(rng.integers(0, 1 << 40, 4000))
+    W = bloom_words(keys.shape[0])
+    bits = jnp.asarray(bloom_build_np(keys, W, 7))
+    probes = jnp.asarray(rng.integers(0, 1 << 40, B))
+    want = np.asarray(kref.bloom_probe_kernel_ref(bits, probes, 7,
+                                                  jnp.int32(W)))
+    got = np.asarray(ops.bloom_probe(bits, probes, W, k_hashes=7,
+                                     impl="pallas_interpret"))
+    assert got.shape == (B,)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hst.integers(0, 2**31), hst.integers(16, 400), hst.integers(6, 14))
+def test_filter_zero_false_negatives_property(seed, n, bpk):
+    """Every inserted key must pass its filter — host probe AND stacked
+    kernel agree (a false negative would lose a real read)."""
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(-(1 << 50), 1 << 50, n))
+    f = build_level_filter(keys, bpk, 7)
+    assert f.maybe(keys).all()
+    bits = jnp.asarray(f.bits[None, :])
+    nw = jnp.asarray(np.array([f.n_words], np.int32))
+    out = np.asarray(ops.bloom_probe_stack(bits, nw, jnp.asarray(keys),
+                                           k_hashes=7, impl="pallas_interpret"))
+    assert out[0].all()
+
+
+def test_filter_maybe_np_empty_and_missing_levels():
+    keys = np.arange(0, 1000, dtype=np.int64) * 3
+    f = build_level_filter(keys, 10, 7)
+    m = filter_maybe_np([f, None], keys[:16])
+    assert m[0].all() and m[1].all()      # None level never prunes
+    absent = keys[:16] + 1
+    m2 = filter_maybe_np([f], absent)
+    assert not m2[0].any() or m2[0].sum() < 4   # ~1% FPR at 10 bpk
+
+
+# --------------------------------------------------------------- CBA sizing
+
+def test_cba_filter_sizing_bounds_and_bootstrap():
+    from repro.core.cba import CBAConfig, MaintenanceScheduler
+    from repro.core.clock import CostModel
+
+    sch = MaintenanceScheduler(CBAConfig(), CostModel())
+    # no stats yet: bootstrap at the base sizing
+    assert sch.filter_bits_per_key(1, 10_000, 10, 6, 16, 7) == 10
+    assert sch.filter_decisions["bootstrap"] == 1
+    # fpr is monotone decreasing in bits-per-key with fixed k
+    fprs = [sch.filter_fpr(b, 7) for b in range(6, 17)]
+    assert all(x > y for x, y in zip(fprs, fprs[1:]))
+    assert 0.005 < sch.filter_fpr(10, 7) < 0.015
+
+
+# ------------------------------------------------------------------ durable
+
+def test_manifest_filter_record_and_invalidation():
+    from repro.storage import ManifestState, checkpoint_edit
+
+    state = ManifestState(live={})
+    state.apply({"add": [[1, 2]]})
+    state.apply({"filter": {"2": 5}})
+    assert state.filters == {2: 5}
+    # any structural change at the level drops its record
+    state.apply({"add": [[3, 2]]})
+    assert state.filters == {}
+    state.apply({"filter": {"2": 6}})
+    state.apply({"del": [1]})          # fid 1 lives at level 2
+    assert state.filters == {}
+    state.apply({"filter": {"2": 7}, "add": [[9, 3]]})
+    assert state.filters == {2: 7}
+    replayed = ManifestState(live={})
+    replayed.apply(checkpoint_edit(state))
+    assert replayed.filters == {2: 7}
+
+
+def test_filter_sidecar_roundtrip_and_torn_fallback(tmp_path):
+    from repro.storage import load_level_filter, write_level_filter
+
+    keys = np.unique(np.random.default_rng(0).integers(0, 1 << 40, 5000))
+    f = build_level_filter(keys, 12, 7)
+    path = str(tmp_path / "flt-1-000003.bf")
+    write_level_filter(path, f)
+    r = load_level_filter(path)
+    assert (r.n_words, r.k_hashes, r.bits_per_key, r.n_keys) == \
+        (f.n_words, f.k_hashes, f.bits_per_key, f.n_keys)
+    np.testing.assert_array_equal(r.bits, f.bits)
+    assert r.maybe(keys).all()
+    # torn sidecar: never an error, always "rebuild"
+    with open(path, "r+b") as fh:
+        fh.truncate(os.path.getsize(path) // 2)
+    assert load_level_filter(path) is None
+    assert load_level_filter(str(tmp_path / "missing.bf")) is None
+
+
+def test_reopen_serves_filters_without_rebuild(tmp_path):
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg())
+    keys = np.random.default_rng(1).permutation(
+        np.arange(1, 12001, dtype=np.int64) * 5)
+    _load(st, keys)
+    f, _ = st.get_batch(keys[:512])           # builds + uses filters
+    assert f.all()
+    built = st.stats()["filters_built"]
+    assert built > 0
+    assert st.stats()["filters_persisted"]    # swept into the MANIFEST
+    st.close()
+
+    st2 = BourbonStore.open(d, small_cfg())
+    assert st2.stats()["filters_recovered"] > 0
+    miss, _ = st2.get_batch(keys[:512] + 1)   # filtered path, zero rebuild
+    assert not miss.any()
+    assert st2.stats()["filters_built"] == 0
+    assert st2.stats()["filter_screened"] > 0
+    hit, _ = st2.get_batch(keys[:512])
+    assert hit.all()
+    st2.close()
+
+
+def test_torn_filter_sidecar_rebuilds_lazily(tmp_path):
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg())
+    keys = np.random.default_rng(2).permutation(
+        np.arange(1, 12001, dtype=np.int64) * 3)
+    _load(st, keys)
+    st.get_batch(keys[:256])
+    st.close()
+
+    torn = [n for n in os.listdir(d) if n.startswith("flt-")]
+    assert torn
+    for name in torn:
+        with open(os.path.join(d, name), "r+b") as fh:
+            fh.truncate(8)
+
+    st2 = BourbonStore.open(d, small_cfg())
+    assert st2.stats()["filters_recovered"] == 0
+    f, _ = st2.get_batch(keys[:512])          # lazy rebuild, reads intact
+    assert f.all()
+    assert st2.stats()["filters_built"] > 0
+    miss, _ = st2.get_batch(keys[:512] + 1)
+    assert not miss.any()
+    st2.close()
+
+
+def test_structure_change_invalidates_filters(tmp_path):
+    d = str(tmp_path / "db")
+    st = BourbonStore.open(d, small_cfg())
+    keys = np.random.default_rng(3).permutation(
+        np.arange(1, 12001, dtype=np.int64) * 7)
+    _load(st, keys)
+    st.get_batch(keys[:256])
+    ver0 = list(st._filter_versions)
+    # more writes force flush/compaction: the touched levels' filters are
+    # invalidated and rebuilt with the new key sets
+    more = keys[:6000] + 1
+    _load(st, more)
+    f, _ = st.get_batch(np.concatenate([keys[:256], more[:256]]))
+    assert f.all()
+    assert list(st._filter_versions) != ver0
+    st.close()
+
+
+# ----------------------------------------------------------------- identity
+
+def test_filtered_vs_unfiltered_results_identical():
+    keys = np.random.default_rng(4).permutation(
+        np.arange(1, 20001, dtype=np.int64) * 4)
+    mixed = np.concatenate([keys[:1024], keys[:1024] + 1,
+                            keys[5000:5512], keys[5000:5512] + 2])
+
+    def run(enabled):
+        st = BourbonStore(small_cfg(
+            filters=FilterConfig(enabled=enabled)))
+        for off in range(0, keys.shape[0], 4096):
+            st.put_batch(keys[off: off + 4096])
+        st.learn_all()
+        return st, st.get_batch(mixed)
+
+    st_on, (f_on, v_on) = run(True)
+    st_off, (f_off, v_off) = run(False)
+    np.testing.assert_array_equal(f_on, f_off)
+    np.testing.assert_array_equal(np.asarray(v_on), np.asarray(v_off))
+    assert st_on.stats()["filter_screened"] > 0
+    assert st_off.stats()["filter_screened"] == 0
+
+
+def test_sharded_filtered_vs_unfiltered_identical(tmp_path):
+    from repro.distributed import ShardedConfig, ShardedStore
+
+    keys = np.random.default_rng(5).permutation(
+        np.arange(1, 16001, dtype=np.int64) * 6)
+    mixed = np.concatenate([keys[:1024], keys[:1024] + 1])
+
+    def run(enabled, sub):
+        st = ShardedStore.open(
+            str(tmp_path / sub),
+            ShardedConfig(n_shards=2, key_lo=0, key_hi=int(keys.max()) + 2),
+            small_cfg(filters=FilterConfig(enabled=enabled)))
+        for off in range(0, keys.shape[0], 4096):
+            st.put_batch(keys[off: off + 4096])
+        out = st.get_batch(mixed)
+        state = st.device_state()
+        st.close()
+        return out, state
+
+    (f_on, v_on), state_on = run(True, "on")
+    (f_off, v_off), state_off = run(False, "off")
+    assert "fbits" in state_on and "fbits" not in state_off
+    np.testing.assert_array_equal(f_on, f_off)
+    np.testing.assert_array_equal(np.asarray(v_on), np.asarray(v_off))
+    assert f_on[:1024].all() and not f_on[1024:].any()
+
+
+def test_tombstones_pass_filters_and_report_missing():
+    """A deleted key must stay deleted on the filtered path: the tombstone
+    passes its level filter (it's in the key set), the engine finds it,
+    and the GET reports not-found — zero false 'found's either way."""
+    st = BourbonStore(small_cfg())
+    keys = np.arange(1, 8001, dtype=np.int64) * 9
+    for off in range(0, keys.shape[0], 4096):
+        st.put_batch(keys[off: off + 4096])
+    st.flush_all()
+    dead = keys[::4]
+    st.delete_batch(dead)
+    st.flush_all()
+    f, _ = st.get_batch(keys[:2048])
+    assert not f[::4].any()
+    assert f[np.arange(2048) % 4 != 0].all()

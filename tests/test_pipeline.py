@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import LSMConfig, StoreConfig
+from repro.core.filters import FilterConfig
 from repro.core.lsm import N_LEVELS
 from repro.core.store import BourbonStore
 from repro.distributed import ShardedConfig, ShardedStore
@@ -309,10 +310,13 @@ def test_sustained_reads_force_drain_keeps_maintenance_alive(tmp_path):
 def test_lookup_trace_count_stable_across_epochs(tmp_path):
     """Regression (retrace audit): a fresh DeviceState whose padded
     geometry is unchanged must reuse the cached traced program — the jit
-    cache is keyed on the state's full shape signature."""
+    cache is keyed on the state's full shape signature.  Filters are off:
+    the plane's host-answer path would resolve these small batches without
+    ever dispatching a device program."""
     cfg = StoreConfig(mode="wisckey",
                       lsm=LSMConfig(memtable_cap=1 << 10, file_cap=1 << 11,
-                                    l1_cap_records=1 << 13))
+                                    l1_cap_records=1 << 13),
+                      filters=FilterConfig(enabled=False))
     st = BourbonStore(cfg)
     keys = _keys(3000, seed=10)
     st.put_batch(keys)
